@@ -1,0 +1,51 @@
+"""Shared benchmark helpers.
+
+Scale note: the paper's testbed is 50 Raspberry Pis × 3000–12000 s wall
+time × 700–1500 DRL episodes. This container is one CPU core, so every
+benchmark has a ``quick`` (default) and a ``full`` profile; real-mode
+benches shrink devices/local-data/threshold while keeping every ratio the
+paper varies (frequencies, clustering, non-IID level). EXPERIMENTS.md
+records which profile produced each number.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import sync
+from repro.sim import EnvConfig, HFLEnv
+
+
+def small_real_cfg(task="mnist", **kw) -> EnvConfig:
+    # lr raised vs the paper's 0.003: the synthetic task at this reduced
+    # scale needs it to show quality separation within ~15 rounds
+    base = dict(task=task, mode="real", n_devices=8, n_edges=2,
+                n_local=96, batch_size=32, threshold_time=260.0,
+                gamma_max=3, seed=0, lr=0.015)
+    base.update(kw)
+    return EnvConfig(**base)
+
+
+def analytic_cfg(task="mnist", **kw) -> EnvConfig:
+    base = dict(task=task, mode="analytic", n_devices=50, n_edges=5,
+                threshold_time=3000.0, gamma_max=8, seed=0)
+    base.update(kw)
+    return EnvConfig(**base)
+
+
+def emit(rows, table):
+    out = []
+    for r in rows:
+        for k, v in r.items():
+            if k in ("scheme", "setting"):
+                continue
+            name = f"{table}/{r.get('scheme', r.get('setting', ''))}/{k}"
+            out.append((name, v))
+    return out
+
+
+def timed(fn, *a, **kw):
+    t0 = time.time()
+    out = fn(*a, **kw)
+    return out, time.time() - t0

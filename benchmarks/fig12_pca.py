@@ -1,0 +1,25 @@
+"""Paper Fig. 12 — impact of the PCA component count n_PCA on Arena's
+learning (2 / 6 / 10). Analytic env exposes n_PCA through the state
+width; agents trained per setting."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import analytic_cfg
+from repro.core import sync
+from repro.sim import HFLEnv
+
+
+def run(quick: bool = True):
+    episodes = 14 if quick else 250
+    rows = []
+    for n_pca in (2, 6, 10):
+        env = HFLEnv(analytic_cfg(n_pca=n_pca, seed=6))
+        agent, log = sync.train_agent(env, episodes=episodes)
+        k = max(len(log.episode_acc) // 5, 1)
+        rows.append({"setting": f"npca{n_pca}",
+                     "final_acc": round(
+                         float(np.mean(log.episode_acc[-k:])), 4),
+                     "reward_last5th": round(
+                         float(np.mean(log.episode_rewards[-k:])), 3)})
+    return rows

@@ -1,0 +1,28 @@
+"""Paper Fig. 3 — per-SGD time/energy vs background CPU usage on the
+device model (validates the simulator against the published curve shape:
+monotone increase + heavy jitter)."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.sim.hardware import DeviceProfiles
+
+
+def run(quick: bool = True):
+    rows = []
+    rng = np.random.default_rng(0)
+    for task in ("mnist", "cifar"):
+        for usage in (0.05, 0.25, 0.5, 0.75, 0.95):
+            prof = DeviceProfiles(
+                cpu_usage=np.full(200, usage), freq=np.full(200, 1.0),
+                flops=np.full(200, 1.0), profile_time=np.zeros(200),
+                profile_energy=np.zeros(200), task=task)
+            t = prof.epoch_time(rng)
+            e = prof.epoch_energy(rng)
+            rows.append({
+                "setting": f"{task}/u{int(usage*100)}",
+                "t_mean_s": round(float(t.mean()), 3),
+                "t_std_s": round(float(t.std()), 3),
+                "e_mean_mAh": round(float(e.mean()), 4),
+                "e_std_mAh": round(float(e.std()), 4)})
+    return rows

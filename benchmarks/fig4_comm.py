@@ -1,0 +1,22 @@
+"""Paper Fig. 4 — edge→cloud communication time by model size and region
+(Beijing vs Washington D.C. to a Silicon Valley cloud)."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.sim.hardware import CommModel
+
+
+def run(quick: bool = True):
+    rows = []
+    rng = np.random.default_rng(0)
+    for task in ("mnist", "cifar"):
+        cm = CommModel(["cn", "us"], task=task)
+        t = np.stack([cm.ec_time(rng) for _ in range(200)])
+        rows.append({"setting": f"{task}/cn",
+                     "t_mean_s": round(float(t[:, 0].mean()), 2),
+                     "t_p95_s": round(float(np.percentile(t[:, 0], 95)), 2)})
+        rows.append({"setting": f"{task}/us",
+                     "t_mean_s": round(float(t[:, 1].mean()), 2),
+                     "t_p95_s": round(float(np.percentile(t[:, 1], 95)), 2)})
+    return rows

@@ -1,0 +1,30 @@
+"""Paper Fig. 7 — DRL agent training: reward / energy / accuracy vs
+episode. Analytic-mode env at the paper's topology (50 devices, 5 edges);
+quick = 40 episodes, full = the paper's 1500 (MNIST) / 700 (Cifar)."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import analytic_cfg
+from repro.core import sync
+from repro.sim import HFLEnv
+
+
+def run(quick: bool = True):
+    rows = []
+    for task, eps_full in (("mnist", 1500), ("cifar", 700)):
+        episodes = 22 if quick else eps_full
+        env = HFLEnv(analytic_cfg(task=task))
+        agent, log = sync.train_agent(env, episodes=episodes)
+        r = np.asarray(log.episode_rewards)
+        k = max(len(r) // 5, 1)
+        rows.append({
+            "setting": task,
+            "episodes": episodes,
+            "reward_first5th": round(float(r[:k].mean()), 3),
+            "reward_last5th": round(float(r[-k:].mean()), 3),
+            "final_acc": round(float(np.mean(log.episode_acc[-k:])), 4),
+            "final_energy_mAh": round(
+                float(np.mean(log.episode_energy[-k:])), 2),
+        })
+    return rows

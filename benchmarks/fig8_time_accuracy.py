@@ -1,0 +1,47 @@
+"""Paper Fig. 8 — time-to-accuracy across methods (Vanilla-FL,
+Vanilla-HFL, Favor, Share, Hwamei, Arena). Arena/Hwamei agents are
+trained first (analytic env), then all methods run one evaluation
+episode; we report accuracy at the end and the time to reach the target
+accuracy (paper: 72% MNIST / 52% Cifar — rescaled to the analytic env's
+a_max)."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import analytic_cfg
+from repro.core import sync
+from repro.sim import HFLEnv
+
+
+def _time_to(h, target):
+    t = 0.0
+    for acc, dt in zip(h["acc"], h["time"]):
+        t += dt
+        if acc >= target:
+            return round(t, 1)
+    return float("inf")
+
+
+def run(quick: bool = True):
+    episodes = 18 if quick else 400
+    target = 0.62
+    rows = []
+    env = HFLEnv(analytic_cfg())
+    arena, _ = sync.train_agent(env, episodes=episodes)
+    hwamei, _ = sync.train_agent(HFLEnv(analytic_cfg(seed=1)),
+                                 episodes=episodes, enhancements=False)
+    runs = [
+        ("vanilla-fl", lambda e: sync.run_vanilla_fl(e, g1=5, frac=0.8)),
+        ("vanilla-hfl", lambda e: sync.run_vanilla_hfl(e, g1=5, g2=4)),
+        ("favor", lambda e: sync.run_favor(e, g1=5)),
+        ("var-freq-b", sync.run_var_freq_b),
+        ("hwamei", lambda e: sync.run_learned(e, hwamei)),
+        ("arena", lambda e: sync.run_learned(e, arena)),
+    ]
+    for name, fn in runs:
+        h = fn(HFLEnv(analytic_cfg(seed=7)))
+        rows.append({"scheme": name,
+                     "final_acc": round(h["final_acc"], 4),
+                     "t_to_target_s": _time_to(h, target),
+                     "total_energy_mAh": round(h["total_energy"], 1)})
+    return rows

@@ -1,0 +1,41 @@
+"""Aggregates reports/dryrun/*.json into the §Roofline table (one row per
+arch × shape × mesh): three terms, dominant bottleneck, useful-FLOP
+ratio. This is the per-paper-figure bench for the TPU framework path —
+the paper has no such table; it's the deliverable-(g) analysis."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+
+def load_reports(out_dir: str = "reports/dryrun"):
+    rows = []
+    for fn in sorted(glob.glob(os.path.join(out_dir, "*.json"))):
+        with open(fn) as f:
+            r = json.load(f)
+        if r.get("skipped"):
+            rows.append({"setting": f"{r['arch']}/{r['shape']}",
+                         "skipped": r["reason"]})
+            continue
+        rl = r["roofline"]
+        rows.append({
+            "setting": f"{r['arch']}/{r['shape']}/{r['mesh']}/"
+                       f"{r.get('tag', 'baseline')}",
+            "compute_s": round(rl["compute_s"], 4),
+            "memory_s": round(rl["memory_s"], 4),
+            "collective_s": round(rl["collective_s"], 4),
+            "dominant": rl["dominant"],
+            "hbm_gb": r.get("hbm_per_device_gb"),
+            "fits_16gb": r.get("fits_16gb"),
+            "useful_flop_ratio": round(r.get("useful_flop_ratio", 0.0), 3),
+        })
+    return rows
+
+
+def run(quick: bool = True):
+    rows = load_reports()
+    if not rows:
+        rows = [{"setting": "no-reports",
+                 "note": "run `python -m repro.launch.dryrun --all` first"}]
+    return rows

@@ -1,0 +1,66 @@
+"""Benchmark driver: one module per paper table/figure (+ the roofline
+and kernel tables for the TPU framework path).
+
+    PYTHONPATH=src python -m benchmarks.run [--full] [--only NAME]
+
+Prints ``name,metric,value`` CSV rows (collated per module) and writes
+reports/bench_results.json.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+BENCHES = [
+    "fig2_sync_schemes",
+    "fig3_device_profile",
+    "fig4_comm",
+    "fig7_drl_training",
+    "fig8_time_accuracy",
+    "fig9_threshold",
+    "table1_cluster",
+    "fig11_noniid",
+    "fig12_pca",
+    "table2_enhancement",
+    "kernels_bench",
+    "roofline",
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale profiles (hours)")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+    quick = not args.full
+    results = {}
+    names = [args.only] if args.only else BENCHES
+    print("name,metric,value")
+    for name in names:
+        mod = __import__(f"benchmarks.{name}", fromlist=["run"])
+        t0 = time.time()
+        try:
+            rows = mod.run(quick=quick)
+        except Exception as e:  # noqa: BLE001
+            print(f"{name},ERROR,{e!r}", flush=True)
+            results[name] = {"error": repr(e)}
+            continue
+        results[name] = rows
+        for r in rows:
+            tag = r.get("scheme", r.get("setting", ""))
+            for k, v in r.items():
+                if k in ("scheme", "setting"):
+                    continue
+                print(f"{name}/{tag},{k},{v}", flush=True)
+        print(f"{name},elapsed_s,{time.time()-t0:.1f}", flush=True)
+    os.makedirs("reports", exist_ok=True)
+    with open("reports/bench_results.json", "w") as f:
+        json.dump(results, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

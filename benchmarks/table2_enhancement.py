@@ -1,0 +1,39 @@
+"""Paper Table 2 — impact of the enhancements (GAE + shaped reward +
+projection): Arena vs Hwamei — accuracy, energy, episodes-to-converge
+(first episode window whose mean reward reaches 95% of the final)."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import analytic_cfg
+from repro.core import sync
+from repro.sim import HFLEnv
+
+
+def _episodes_to_converge(rewards, frac=0.95):
+    r = np.asarray(rewards, np.float64)
+    if len(r) < 10:
+        return len(r)
+    k = max(len(r) // 10, 2)
+    smooth = np.convolve(r, np.ones(k) / k, mode="valid")
+    target = smooth[-1] - abs(smooth[-1]) * (1 - frac)
+    idx = np.argmax(smooth >= target)
+    return int(idx + k)
+
+
+def run(quick: bool = True):
+    episodes = 24 if quick else 600
+    rows = []
+    for name, enh in (("arena", True), ("hwamei", False)):
+        env = HFLEnv(analytic_cfg(seed=8))
+        agent, log = sync.train_agent(env, episodes=episodes,
+                                      enhancements=enh)
+        k = max(len(log.episode_acc) // 5, 1)
+        rows.append({
+            "setting": name,
+            "final_acc": round(float(np.mean(log.episode_acc[-k:])), 4),
+            "energy_mAh": round(
+                float(np.mean(log.episode_energy[-k:])), 2),
+            "episodes_to_converge": _episodes_to_converge(
+                log.episode_rewards)})
+    return rows

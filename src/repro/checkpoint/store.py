@@ -1,0 +1,54 @@
+"""Minimal npz-based pytree checkpointing (server model + agent state).
+
+Leaves are flattened with ``jax.tree_util`` key paths as npz keys, so any
+nested dict/tuple pytree round-trips exactly (structure file alongside).
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any
+
+import jax
+import numpy as np
+
+
+def _key_str(path) -> str:
+    out = []
+    for p in path:
+        if hasattr(p, "key"):
+            out.append(str(p.key))
+        elif hasattr(p, "idx"):
+            out.append(str(p.idx))
+        else:
+            out.append(str(p))
+    return "/".join(out)
+
+
+def _to_np(v):
+    """bfloat16 has no numpy cast — store as f32 (exact)."""
+    import jax.numpy as jnp
+    if hasattr(v, "dtype") and v.dtype == jnp.bfloat16:
+        return np.asarray(jnp.asarray(v, jnp.float32))
+    return np.asarray(v)
+
+
+def save_pytree(tree: Any, path: str) -> None:
+    leaves = jax.tree_util.tree_flatten_with_path(tree)[0]
+    arrays = {_key_str(p): _to_np(v) for p, v in leaves}
+    treedef = jax.tree.structure(tree)
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    np.savez(path + ".npz", **arrays)
+    with open(path + ".tree.json", "w") as f:
+        json.dump({"treedef": str(treedef),
+                   "keys": list(arrays.keys())}, f)
+
+
+def load_pytree(template: Any, path: str) -> Any:
+    data = np.load(path + ".npz")
+    leaves_t = jax.tree_util.tree_flatten_with_path(template)[0]
+    new = []
+    for p, v in leaves_t:
+        arr = data[_key_str(p)]
+        new.append(jax.numpy.asarray(arr, dtype=v.dtype))
+    return jax.tree.unflatten(jax.tree.structure(template), new)

@@ -1,0 +1,3 @@
+"""Arena core: hierarchical-FL aggregation math, synchronization schemes,
+profiling/clustering, state compression, the PPO agent, and the
+convergence bound (paper §3)."""

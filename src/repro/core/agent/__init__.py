@@ -1,0 +1,1 @@
+from repro.core.agent.ppo import PPOAgent, PPOConfig  # noqa: F401

@@ -1,0 +1,69 @@
+"""Actor/critic networks (paper §4.1: 2 conv + 3 fc; CNN feature extractor
+over the (M+1)×(n_PCA+3) state matrix, Gaussian heads for 2M continuous
+actions)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common
+
+
+def _conv_same(x, w, b):
+    """x: (B, H, W, C); 3x3 SAME conv."""
+    out = jax.lax.conv_general_dilated(
+        x, w, (1, 1), "SAME", dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    return out + b
+
+
+def init_net(key, state_shape, action_dim: int):
+    h, w = state_shape
+    ks = jax.random.split(key, 8)
+    feat = 32 * h * w
+    return {
+        "c1_w": common.dense_init(ks[0], (3, 3, 1, 16), jnp.float32,
+                                  scale=0.3),
+        "c1_b": jnp.zeros((16,)),
+        "c2_w": common.dense_init(ks[1], (3, 3, 16, 32), jnp.float32,
+                                  scale=0.1),
+        "c2_b": jnp.zeros((32,)),
+        "f1_w": common.dense_init(ks[2], (feat, 128), jnp.float32),
+        "f1_b": jnp.zeros((128,)),
+        "f2_w": common.dense_init(ks[3], (128, 64), jnp.float32),
+        "f2_b": jnp.zeros((64,)),
+        # actor: mean + raw-std per action (2 outputs per action, §3.3)
+        "mu_w": common.dense_init(ks[4], (64, action_dim), jnp.float32,
+                                  scale=0.01),
+        "mu_b": jnp.zeros((action_dim,)),
+        "std_w": common.dense_init(ks[5], (64, action_dim), jnp.float32,
+                                   scale=0.01),
+        "std_b": jnp.full((action_dim,), 0.5),
+        "v_w": common.dense_init(ks[6], (64, 1), jnp.float32, scale=0.1),
+        "v_b": jnp.zeros((1,)),
+    }
+
+
+def features(params, s):
+    """s: (B, H, W) -> (B, 64)."""
+    x = s[..., None]
+    x = jax.nn.relu(_conv_same(x, params["c1_w"], params["c1_b"]))
+    x = jax.nn.relu(_conv_same(x, params["c2_w"], params["c2_b"]))
+    x = x.reshape(x.shape[0], -1)
+    x = jax.nn.relu(x @ params["f1_w"] + params["f1_b"])
+    x = jax.nn.relu(x @ params["f2_w"] + params["f2_b"])
+    return x
+
+
+def actor_critic(params, s):
+    """Returns (mu (B, A), std (B, A), value (B,))."""
+    f = features(params, s)
+    mu = f @ params["mu_w"] + params["mu_b"]
+    std = jax.nn.softplus(f @ params["std_w"] + params["std_b"]) + 1e-3
+    v = (f @ params["v_w"] + params["v_b"])[:, 0]
+    return mu, std, v
+
+
+def gaussian_logp(mu, std, a):
+    z = (a - mu) / std
+    return jnp.sum(-0.5 * z * z - jnp.log(std)
+                   - 0.5 * jnp.log(2 * jnp.pi), axis=-1)

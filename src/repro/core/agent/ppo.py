@@ -1,0 +1,146 @@
+"""PPO with clipped surrogate (Eq. 13) + GAE (Eq. 14), pure JAX.
+
+``enhancements=False`` reproduces the conference-version agent (*Hwamei*):
+no GAE (plain discounted-return advantages) and the un-shaped linear
+accuracy reward is expected from the env side — used by the Table 2
+ablation.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.agent import networks
+from repro.optim import optimizers
+
+
+@dataclasses.dataclass
+class PPOConfig:
+    lr: float = 3e-4
+    clip_eps: float = 0.2            # ε in Eq. 13
+    discount: float = 0.9            # ξ (paper §4.1)
+    gae_lambda: float = 0.9          # λ (paper §4.1)
+    update_epochs: int = 6
+    minibatch: int = 64
+    vf_coef: float = 0.5
+    ent_coef: float = 1e-3
+    max_grad_norm: float = 0.5
+    enhancements: bool = True        # False -> Hwamei agent
+
+
+class PPOAgent:
+    def __init__(self, key, state_shape, action_dim: int,
+                 cfg: PPOConfig = PPOConfig()):
+        self.cfg = cfg
+        self.params = networks.init_net(key, state_shape, action_dim)
+        self.opt = optimizers.adam(cfg.lr)
+        self.opt_state = self.opt.init(self.params)
+        self.action_dim = action_dim
+        self._key = key
+        self.memory: List[dict] = []
+
+        clip_eps = cfg.clip_eps
+        vf_coef = cfg.vf_coef
+        ent_coef = cfg.ent_coef
+
+        def loss_fn(params, batch):
+            mu, std, v = networks.actor_critic(params, batch["s"])
+            logp = networks.gaussian_logp(mu, std, batch["a"])
+            ratio = jnp.exp(logp - batch["logp_old"])
+            adv = batch["adv"]
+            surr = jnp.minimum(
+                ratio * adv,
+                jnp.clip(ratio, 1 - clip_eps, 1 + clip_eps) * adv)
+            pi_loss = -jnp.mean(surr)
+            v_loss = jnp.mean(jnp.square(v - batch["ret"]))
+            ent = jnp.mean(jnp.sum(jnp.log(std), axis=-1))
+            return pi_loss + vf_coef * v_loss - ent_coef * ent
+
+        def update_step(params, opt_state, batch):
+            g = jax.grad(loss_fn)(params, batch)
+            g, _ = optimizers.clip_by_global_norm(g, cfg.max_grad_norm)
+            return self.opt.update(params, g, opt_state)
+
+        self._update_step = jax.jit(update_step)
+        self._policy = jax.jit(
+            lambda p, s: networks.actor_critic(p, s[None]))
+
+    # ------------------------------------------------------------------
+    def _next_key(self):
+        self._key, sub = jax.random.split(self._key)
+        return sub
+
+    def act(self, state: np.ndarray, deterministic: bool = False):
+        mu, std, v = self._policy(self.params, jnp.asarray(state))
+        mu, std, v = mu[0], std[0], v[0]
+        if deterministic:
+            a = mu
+        else:
+            a = mu + std * jax.random.normal(self._next_key(), mu.shape)
+        logp = networks.gaussian_logp(mu, std, a)
+        return (np.asarray(a), float(logp), float(v))
+
+    def remember(self, s, a, logp, r, v, done):
+        self.memory.append({"s": s, "a": a, "logp": logp, "r": r,
+                            "v": v, "done": done})
+
+    # ------------------------------------------------------------------
+    def _advantages(self):
+        cfg = self.cfg
+        r = np.array([m["r"] for m in self.memory], np.float32)
+        v = np.array([m["v"] for m in self.memory], np.float32)
+        done = np.array([m["done"] for m in self.memory], bool)
+        n = len(r)
+        adv = np.zeros(n, np.float32)
+        ret = np.zeros(n, np.float32)
+        if cfg.enhancements:
+            # GAE (Eq. 14)
+            last = 0.0
+            next_v = 0.0
+            for t in range(n - 1, -1, -1):
+                nv = 0.0 if done[t] else next_v
+                delta = r[t] + cfg.discount * nv - v[t]
+                last = delta + cfg.discount * cfg.gae_lambda \
+                    * (0.0 if done[t] else last)
+                adv[t] = last
+                next_v = v[t]
+            ret = adv + v
+        else:
+            # Hwamei: plain discounted returns
+            acc = 0.0
+            for t in range(n - 1, -1, -1):
+                acc = r[t] + cfg.discount * (0.0 if done[t] else acc)
+                ret[t] = acc
+            adv = ret - v
+        adv = (adv - adv.mean()) / (adv.std() + 1e-8)
+        return adv, ret
+
+    def update(self):
+        """End-of-episode agent update (Algorithm 1 line 19)."""
+        if not self.memory:
+            return 0.0
+        cfg = self.cfg
+        adv, ret = self._advantages()
+        s = np.stack([m["s"] for m in self.memory]).astype(np.float32)
+        a = np.stack([m["a"] for m in self.memory]).astype(np.float32)
+        logp = np.array([m["logp"] for m in self.memory], np.float32)
+        n = len(s)
+        idx = np.arange(n)
+        rng = np.random.default_rng(int(jax.random.randint(
+            self._next_key(), (), 0, 2**31 - 1)))
+        for _ in range(cfg.update_epochs):
+            rng.shuffle(idx)
+            for lo in range(0, n, cfg.minibatch):
+                mb = idx[lo:lo + cfg.minibatch]
+                batch = {"s": jnp.asarray(s[mb]), "a": jnp.asarray(a[mb]),
+                         "logp_old": jnp.asarray(logp[mb]),
+                         "adv": jnp.asarray(adv[mb]),
+                         "ret": jnp.asarray(ret[mb])}
+                self.params, self.opt_state = self._update_step(
+                    self.params, self.opt_state, batch)
+        self.memory.clear()
+        return float(adv.std())

@@ -1,0 +1,205 @@
+"""Hierarchical FL aggregation (paper §2.1, Eqs. 1, 2, 5).
+
+The *model bank* holds every device's parameters as one pytree whose
+leaves carry a leading ``N_devices`` axis; device-local training vmaps
+over it. Edge aggregation (Eq. 1) is a dataset-size-weighted segment-sum
+over the bank; cloud aggregation (Eq. 2) the same over edge models.
+
+Per-edge frequencies (γ1_j, γ2_j) are traced values — one compiled
+``hfl_cloud_round`` serves every action the agent picks, via masked
+upper-bound loops (``max_g1``/``max_g2`` static).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# model bank
+# ---------------------------------------------------------------------------
+
+def init_bank(init_fn: Callable, key, n_devices: int):
+    """Replicates one init across devices (all start from w(0))."""
+    p0 = init_fn(key)
+    return jax.tree.map(
+        lambda a: jnp.broadcast_to(a, (n_devices,) + a.shape), p0)
+
+
+def broadcast_model(model, n: int):
+    return jax.tree.map(lambda a: jnp.broadcast_to(a, (n,) + a.shape), model)
+
+
+def bank_select(bank, i: int):
+    return jax.tree.map(lambda a: a[i], bank)
+
+
+# ---------------------------------------------------------------------------
+# aggregation (Eqs. 1 and 2)
+# ---------------------------------------------------------------------------
+
+def weighted_aggregate(bank, weights, segment_ids, num_segments: int):
+    """Generic dataset-size-weighted aggregation.
+
+    bank leaves: (N, ...); weights: (N,) |D_i|; segment_ids: (N,) edge of
+    each device. Returns pytree with leading ``num_segments`` axis:
+        out_j = sum_{i in j} w_i x_i / sum_{i in j} w_i          (Eq. 1)
+    """
+    wsum = jax.ops.segment_sum(weights, segment_ids, num_segments)
+    wsum = jnp.maximum(wsum, 1e-9)
+
+    def agg(leaf):
+        w = weights.reshape((-1,) + (1,) * (leaf.ndim - 1)).astype(jnp.float32)
+        s = jax.ops.segment_sum(leaf.astype(jnp.float32) * w, segment_ids,
+                                num_segments)
+        return (s / wsum.reshape((-1,) + (1,) * (leaf.ndim - 1))).astype(
+            leaf.dtype)
+
+    return jax.tree.map(agg, bank)
+
+
+def edge_aggregate(bank, device_sizes, edge_assign, n_edges: int):
+    """Eq. 1: w_j^e = Σ_i |D_i| w_i / Σ_i |D_i| over the devices of edge j."""
+    return weighted_aggregate(bank, device_sizes, edge_assign, n_edges)
+
+
+def cloud_aggregate(edge_models, edge_sizes):
+    """Eq. 2: w = Σ_j |D_j| w_j^e / Σ_j |D_j| (single segment)."""
+    n = edge_sizes.shape[0]
+    agg = weighted_aggregate(edge_models, edge_sizes,
+                             jnp.zeros((n,), jnp.int32), 1)
+    return jax.tree.map(lambda a: a[0], agg)
+
+
+# ---------------------------------------------------------------------------
+# device-local training (vmapped SGD epochs)
+# ---------------------------------------------------------------------------
+
+def make_local_trainer(loss_fn: Callable, lr: float, batch_size: int):
+    """Returns ``local_train(bank, x, y, gamma1_dev, max_g1, key)``.
+
+    loss_fn(params, batch) -> scalar. One 'epoch' = one pass over the
+    device's local shard in shuffled minibatches (the paper's unit: γ1
+    epochs of local SGD between edge aggregations).
+    gamma1_dev: (N,) traced per-device epoch counts; epochs beyond a
+    device's γ1 are masked no-ops (static bound ``max_g1``).
+    """
+
+    def device_epoch(params, x, y, perm):
+        nb = x.shape[0] // batch_size
+        idx = perm[:nb * batch_size].reshape(nb, batch_size)
+
+        def step(p, bidx):
+            g = jax.grad(loss_fn)(p, {"x": x[bidx], "y": y[bidx]})
+            return jax.tree.map(
+                lambda a, b: (a.astype(jnp.float32)
+                              - lr * b.astype(jnp.float32)).astype(a.dtype),
+                p, g), None
+
+        params, _ = jax.lax.scan(step, params, idx)
+        return params
+
+    def local_train(bank, x, y, gamma1_dev, max_g1: int, key):
+        n, n_local = x.shape[0], x.shape[1]
+
+        def one_epoch(carry, e):
+            bank, key = carry
+            key, sub = jax.random.split(key)
+            perms = jax.vmap(
+                lambda k: jax.random.permutation(k, n_local))(
+                    jax.random.split(sub, n))
+            new = jax.vmap(device_epoch)(bank, x, y, perms)
+            active = (e < gamma1_dev)
+
+            def mask(a, b):
+                am = active.reshape((-1,) + (1,) * (a.ndim - 1))
+                return jnp.where(am, b, a)
+
+            bank = jax.tree.map(mask, bank, new)
+            return (bank, key), None
+
+        (bank, _), _ = jax.lax.scan(one_epoch, (bank, key),
+                                    jnp.arange(max_g1))
+        return bank
+
+    return local_train
+
+
+# ---------------------------------------------------------------------------
+# one cloud round (Eq. 5 composition)
+# ---------------------------------------------------------------------------
+
+def make_cloud_round(loss_fn: Callable, lr: float, batch_size: int,
+                     n_edges: int, max_g1: int, max_g2: int):
+    """Builds a jittable ``cloud_round``:
+
+    cloud_round(bank, x, y, sizes, edge_assign, g1 (M,), g2 (M,), key)
+      -> (bank synced to the new global model, global model, edge models)
+
+    Composition per Eq. 5: for t2 < γ2_j, devices of edge j run γ1_j local
+    epochs then edge-aggregate; edges past their γ2_j freeze; finally the
+    cloud aggregates the edge models and broadcasts.
+    """
+    local_train = make_local_trainer(loss_fn, lr, batch_size)
+
+    def cloud_round(bank, x, y, sizes, edge_assign, g1, g2, key):
+        g1_dev = g1[edge_assign]
+        g2_dev = g2[edge_assign]
+
+        def t2_step(carry, t2):
+            bank, edge_models, key = carry
+            key, sub = jax.random.split(key)
+            active_dev = t2 < g2_dev
+            g1_eff = jnp.where(active_dev, g1_dev, 0)
+            bank = local_train(bank, x, y, g1_eff, max_g1, sub)
+            agg = edge_aggregate(bank, sizes, edge_assign, n_edges)
+            active_edge = (t2 < g2).reshape((-1,))
+
+            def mask_e(old, new):
+                am = active_edge.reshape((-1,) + (1,) * (old.ndim - 1))
+                return jnp.where(am, new, old)
+
+            edge_models = jax.tree.map(mask_e, edge_models, agg)
+            # devices resume from their edge's current model
+            bank = jax.tree.map(lambda e: e[edge_assign], edge_models)
+            return (bank, edge_models, key), None
+
+        edge_models0 = edge_aggregate(bank, sizes, edge_assign, n_edges)
+        (bank, edge_models, _), _ = jax.lax.scan(
+            t2_step, (bank, edge_models0, key), jnp.arange(max_g2))
+        edge_sizes = jax.ops.segment_sum(sizes, edge_assign, n_edges)
+        global_model = cloud_aggregate(edge_models, edge_sizes)
+        bank = jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (x.shape[0],) + a.shape),
+            global_model)
+        return bank, global_model, edge_models
+
+    return cloud_round
+
+
+# ---------------------------------------------------------------------------
+# Vanilla-FL (FedAvg) round — the paper's two-layer baseline
+# ---------------------------------------------------------------------------
+
+def make_fedavg_round(loss_fn: Callable, lr: float, batch_size: int,
+                      max_g1: int):
+    """FedAvg with random participation: selected devices run γ1 local
+    epochs, the cloud aggregates them directly (γ2 ≡ 1)."""
+    local_train = make_local_trainer(loss_fn, lr, batch_size)
+
+    def round_(bank, x, y, sizes, participate, g1, key):
+        n = x.shape[0]
+        g1_dev = jnp.where(participate, g1, 0)
+        bank = local_train(bank, x, y, g1_dev, max_g1, key)
+        w = sizes * participate.astype(sizes.dtype)
+        agg = weighted_aggregate(bank, w, jnp.zeros((n,), jnp.int32), 1)
+        global_model = jax.tree.map(lambda a: a[0], agg)
+        bank = jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (n,) + a.shape), global_model)
+        return bank, global_model
+
+    return round_
+

@@ -1,0 +1,50 @@
+"""PCA model compression for the DRL state (paper §3.2, Eq. 6).
+
+Fit once on the models of the first cloud aggregation (cloud + M edges,
+flattened); the loading vectors are then *reused* for every later round
+("the PCA loading vectors are reused to transform the models without
+fitting the PCA model again").
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+def flatten_model(params) -> jnp.ndarray:
+    """g(·): flatten a model pytree into one f32 vector, fixed leaf order."""
+    leaves = jax.tree_util.tree_leaves_with_path(params)
+    leaves = sorted(leaves, key=lambda kv: str(kv[0]))
+    return jnp.concatenate([v.astype(jnp.float32).reshape(-1)
+                            for _, v in leaves])
+
+
+def fit(x: jnp.ndarray, n_components: int):
+    """x: (n_samples, dim). Returns dict {mean, loadings (k, dim)}.
+    SVD of the centered sample matrix (n_samples is M+1 ≈ 6, tiny)."""
+    mean = jnp.mean(x, axis=0, keepdims=True)
+    xc = x - mean
+    # economical SVD via the (n, n) gram matrix: dim is 20k-450k
+    g = xc @ xc.T                                     # (n, n)
+    w, v = jnp.linalg.eigh(g)                         # ascending
+    order = jnp.argsort(-w)
+    w = jnp.maximum(w[order], 1e-12)
+    v = v[:, order]
+    k = min(n_components, x.shape[0])
+    comps = (xc.T @ v[:, :k]) / jnp.sqrt(w[:k])       # (dim, k) orthonormal
+    # centered n-sample data has rank n-1: zero the degenerate
+    # directions (1/sqrt(w->0) amplifies numerical noise)
+    good = (w[:k] > 1e-6 * w[0]).astype(comps.dtype)
+    comps = comps * good[None, :]
+    loadings = comps.T                                # (k, dim)
+    if k < n_components:
+        pad = jnp.zeros((n_components - k, x.shape[1]), loadings.dtype)
+        loadings = jnp.concatenate([loadings, pad], axis=0)
+    return {"mean": mean, "loadings": loadings}
+
+
+def transform(pca_state, x: jnp.ndarray) -> jnp.ndarray:
+    """x: (n, dim) -> (n, k)."""
+    return (x - pca_state["mean"]) @ pca_state["loadings"].T

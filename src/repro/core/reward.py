@@ -1,0 +1,14 @@
+"""Reward (paper §3.4, Eqs. 11–12).
+
+r(k) = Υ^{A(k)} − Υ^{A(k−1)} − ε·E(k), Υ = 64: the exponential shaping
+amplifies late-training accuracy gains so the agent still sees signal
+near convergence; ε trades accuracy against device energy.
+"""
+from __future__ import annotations
+
+UPSILON = 64.0
+
+
+def reward(acc_new: float, acc_old: float, energy: float,
+           epsilon: float) -> float:
+    return (UPSILON ** acc_new) - (UPSILON ** acc_old) - epsilon * energy

@@ -1,0 +1,235 @@
+"""Synchronization schemes: Arena + every baseline the paper compares
+against (§2.2 Var-Freq, §4.1 benchmarks).
+
+All schemes drive the same ``HFLEnv`` (one call = one cloud round), so
+time/energy/accuracy are measured identically:
+
+  vanilla-fl   : FedAvg, random participation, γ2 ≡ 1 [1]
+  vanilla-hfl  : fixed (γ1, γ2) at every edge [8]
+  var-freq-a   : per-edge time-equalizing frequencies (§2.2)
+  var-freq-b   : var-freq-a minus energy-hungry fast edges (§2.2)
+  favor        : FedAvg + value-guided device selection [5] (the DQN
+                 device-selector is realized as an EMA-value bandit over
+                 per-device marginal accuracy, ε-greedy — see DESIGN.md)
+  share        : data-distribution-aware topology shaping [9] + HFL
+  hwamei       : the conference-version agent (PPO, no GAE, linear reward)
+  arena        : this paper (PPO + GAE + shaped reward + projection)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import numpy as np
+
+from repro.core.agent import PPOAgent, PPOConfig
+from repro.core.reward import UPSILON
+
+
+# ---------------------------------------------------------------------------
+# static schemes
+# ---------------------------------------------------------------------------
+
+def run_vanilla_fl(env, g1: int = 20, frac: float = 0.8, seed: int = 0):
+    """FedAvg: γ1 local epochs, direct cloud sync (γ2=1), random
+    participation. (Edge agg followed immediately by cloud agg equals the
+    global weighted mean, so the HFL env expresses FL exactly.)"""
+    rng = np.random.default_rng(seed)
+    env.reset()
+    done = False
+    while not done:
+        part = rng.random(env.cfg.n_devices) < frac
+        if not part.any():
+            part[rng.integers(env.cfg.n_devices)] = True
+        m = env.cfg.n_edges
+        _, _, done, info = env.step_raw(np.full(m, g1), np.ones(m), part)
+    return _history(env)
+
+
+def run_vanilla_hfl(env, g1: int = 5, g2: int = 4):
+    env.reset()
+    done = False
+    m = env.cfg.n_edges
+    while not done:
+        _, _, done, info = env.step_raw(np.full(m, g1), np.full(m, g2))
+    return _history(env)
+
+
+def _time_equalizing_freqs(env, budget_epochs: float = 20.0):
+    """Var-Freq A: pick per-edge γ1 so γ1_j · t_j ≈ const, with the mean
+    epoch budget fixed; γ2 fixed at 2."""
+    t_edge = np.array([
+        env.profiles.epoch_time(np.random.default_rng(0))[
+            env.edge_assign == j].max()
+        for j in range(env.cfg.n_edges)])
+    inv = 1.0 / t_edge
+    g1 = inv / inv.mean() * (budget_epochs / 2.0)
+    g1 = np.clip(np.round(g1), 1, env.cfg.gamma_max).astype(np.int64)
+    g2 = np.full(env.cfg.n_edges, 2, np.int64)
+    return g1, g2
+
+
+def run_var_freq_a(env):
+    env.reset()
+    g1, g2 = _time_equalizing_freqs(env)
+    done = False
+    while not done:
+        _, _, done, _ = env.step_raw(g1, g2)
+    return _history(env)
+
+
+def run_var_freq_b(env):
+    """Var-Freq B: A, then reduce frequencies of fast-but-power-hungry
+    edges (§2.2: 'appropriately reduce the aggregation frequency of fast
+    devices with high energy consumption')."""
+    env.reset()
+    g1, g2 = _time_equalizing_freqs(env)
+    e_edge = np.array([
+        env.profiles.epoch_energy(np.random.default_rng(0))[
+            env.edge_assign == j].mean()
+        for j in range(env.cfg.n_edges)])
+    hungry = e_edge > np.median(e_edge)
+    g1 = np.where(hungry, np.maximum(g1 - 2, 1), g1).astype(np.int64)
+    done = False
+    while not done:
+        _, _, done, _ = env.step_raw(g1, g2)
+    return _history(env)
+
+
+def run_favor(env, g1: int = 20, frac: float = 0.6, eps: float = 0.2,
+              seed: int = 0):
+    """Favor-style selection: per-device EMA value of the global accuracy
+    delta when it participates; pick top-frac with ε-greedy exploration."""
+    rng = np.random.default_rng(seed)
+    env.reset()
+    n = env.cfg.n_devices
+    value = np.zeros(n)
+    done = False
+    m = env.cfg.n_edges
+    k_sel = max(1, int(frac * n))
+    while not done:
+        explore = rng.random(n) < eps
+        score = np.where(explore, rng.random(n) + value.max(), value)
+        sel = np.zeros(n, bool)
+        sel[np.argsort(-score)[:k_sel]] = True
+        acc_old = env.acc
+        _, _, done, info = env.step_raw(np.full(m, g1), np.ones(m), sel)
+        delta = info["acc"] - acc_old
+        value[sel] = 0.8 * value[sel] + 0.2 * delta
+    return _history(env)
+
+
+def share_topology(env) -> np.ndarray:
+    """Share [9]: assign devices to edges so every edge's label histogram
+    approaches the global distribution (greedy, size-balanced)."""
+    y = np.asarray(env.fed.y)                    # (N, n_local)
+    n, m = env.cfg.n_devices, env.cfg.n_edges
+    n_classes = int(y.max()) + 1
+    hist = np.stack([np.bincount(y[i], minlength=n_classes)
+                     for i in range(n)]).astype(np.float64)
+    hist /= hist.sum(1, keepdims=True)
+    glob = hist.mean(0)
+    cap = -(-n // m)
+    edge_hist = np.zeros((m, n_classes))
+    counts = np.zeros(m, np.int64)
+    assign = np.full(n, -1, np.int64)
+    # most-skewed devices first; place where the edge mix improves most
+    order = np.argsort(-np.abs(hist - glob).sum(1))
+    for i in order:
+        best, best_cost = -1, np.inf
+        for j in range(m):
+            if counts[j] >= cap:
+                continue
+            mix = (edge_hist[j] * counts[j] + hist[i]) / (counts[j] + 1)
+            cost = np.abs(mix - glob).sum()
+            if cost < best_cost:
+                best, best_cost = j, cost
+        assign[i] = best
+        edge_hist[best] = (edge_hist[best] * counts[best] + hist[i]) \
+            / (counts[best] + 1)
+        counts[best] += 1
+    return assign
+
+
+def run_share(env, g1: int = 5, g2: int = 4):
+    assign = share_topology(env)
+    env.set_topology(assign)
+    return run_vanilla_hfl(env, g1, g2)
+
+
+# ---------------------------------------------------------------------------
+# learned schemes (Arena / Hwamei)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class TrainLog:
+    episode_rewards: list
+    episode_acc: list
+    episode_energy: list
+
+
+def train_agent(env, episodes: int, *, enhancements: bool = True,
+                seed: int = 0, ppo: Optional[PPOConfig] = None,
+                log_every: int = 0):
+    """Algorithm 1: Ω episodes; agent update + memory clear per episode.
+    ``enhancements=False`` trains the Hwamei agent (no GAE + linear
+    reward shaping)."""
+    import jax
+    ppo = ppo or PPOConfig(enhancements=enhancements)
+    agent = PPOAgent(jax.random.PRNGKey(seed), env.state_shape,
+                     env.action_dim, ppo)
+    log = TrainLog([], [], [])
+    for ep in range(episodes):
+        s = env.reset()
+        done = False
+        ep_r = 0.0
+        while not done:
+            a, logp, v = agent.act(s)
+            s2, r, done, info = env.step(a)
+            if not enhancements:
+                # Hwamei reward: linear accuracy delta
+                r = (info["acc"] - (env.acc_hist[-2]
+                                    if len(env.acc_hist) > 1 else 0.1)) \
+                    - env.cfg.epsilon * info["energy"] / 10.0
+            agent.remember(s, a, logp, r, v, done)
+            s = s2
+            ep_r += r
+        agent.update()
+        log.episode_rewards.append(ep_r)
+        log.episode_acc.append(env.acc)
+        log.episode_energy.append(float(np.mean(env.energy_hist)))
+        if log_every and (ep + 1) % log_every == 0:
+            print(f"  ep {ep+1}/{episodes} reward={ep_r:.3f} "
+                  f"acc={env.acc:.3f} "
+                  f"E={np.mean(env.energy_hist):.1f}mAh", flush=True)
+    return agent, log
+
+
+def run_learned(env, agent):
+    """One evaluation episode with a trained agent (deterministic)."""
+    s = env.reset()
+    done = False
+    while not done:
+        a, _, _ = agent.act(s, deterministic=True)
+        s, _, done, _ = env.step(a)
+    return _history(env)
+
+
+# ---------------------------------------------------------------------------
+
+def _history(env):
+    return {"acc": list(env.acc_hist), "energy": list(env.energy_hist),
+            "time": list(env.time_hist), "final_acc": env.acc,
+            "total_energy": float(np.sum(env.energy_hist)),
+            "avg_energy": float(np.mean(env.energy_hist)),
+            "rounds": len(env.acc_hist)}
+
+
+SCHEMES: dict[str, Callable] = {
+    "vanilla-fl": run_vanilla_fl,
+    "vanilla-hfl": run_vanilla_hfl,
+    "var-freq-a": run_var_freq_a,
+    "var-freq-b": run_var_freq_b,
+    "favor": run_favor,
+    "share": run_share,
+}

@@ -1,0 +1,12 @@
+from repro.data.federated import (  # noqa: F401
+    FederatedDataset,
+    make_federated,
+    partition_dirichlet,
+    partition_iid,
+    partition_label_k,
+)
+from repro.data.synthetic import (  # noqa: F401
+    synth_cifar,
+    synth_mnist,
+    token_batch,
+)

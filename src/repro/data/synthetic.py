@@ -1,0 +1,68 @@
+"""Synthetic datasets.
+
+The container is offline, so MNIST/CIFAR are generated as class-conditional
+structured images: each class has a random low-frequency template; samples
+are template + per-sample noise + random shift. CNNs learn these at rates
+comparable to the real datasets' early epochs, which is what the Arena
+experiments need (accuracy that responds to training schedule decisions).
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+N_CLASSES = 10
+
+
+def _make_templates(rng: np.random.Generator, hw: int, chans: int,
+                    sharp: float) -> np.ndarray:
+    """Class templates: smoothed random fields, distinct per class."""
+    base = rng.normal(size=(N_CLASSES, hw + 8, hw + 8, chans))
+    # cheap low-pass: box filter x3
+    for _ in range(3):
+        base = (base + np.roll(base, 1, 1) + np.roll(base, -1, 1)
+                + np.roll(base, 1, 2) + np.roll(base, -1, 2)) / 5.0
+    return base / base.std() * sharp
+
+
+def _make_images(rng: np.random.Generator, base: np.ndarray, n: int,
+                 hw: int, chans: int, labels: np.ndarray) -> np.ndarray:
+    """Samples = shared class template (shifted crop) + per-sample noise."""
+    xs = np.empty((n, hw, hw, chans), np.float32)
+    offs = rng.integers(0, 8, size=(n, 2))
+    noise = rng.normal(scale=1.0, size=(n, hw, hw, chans))
+    for i in range(n):
+        oy, ox = offs[i]
+        xs[i] = base[labels[i], oy:oy + hw, ox:ox + hw] + noise[i]
+    return xs.astype(np.float32)
+
+
+def synth_mnist(n_train: int = 60000, n_test: int = 10000, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    base = _make_templates(rng, 28, 1, sharp=0.42)
+    ytr = rng.integers(0, N_CLASSES, n_train).astype(np.int32)
+    yte = rng.integers(0, N_CLASSES, n_test).astype(np.int32)
+    xtr = _make_images(rng, base, n_train, 28, 1, ytr)
+    xte = _make_images(rng, base, n_test, 28, 1, yte)
+    return {"x": xtr, "y": ytr}, {"x": xte, "y": yte}
+
+
+def synth_cifar(n_train: int = 50000, n_test: int = 10000, seed: int = 1):
+    rng = np.random.default_rng(seed)
+    # lower sharpness -> harder task (CIFAR converges slower, as in paper)
+    base = _make_templates(rng, 32, 3, sharp=0.28)
+    ytr = rng.integers(0, N_CLASSES, n_train).astype(np.int32)
+    yte = rng.integers(0, N_CLASSES, n_test).astype(np.int32)
+    xtr = _make_images(rng, base, n_train, 32, 3, ytr)
+    xte = _make_images(rng, base, n_test, 32, 3, yte)
+    return {"x": xtr, "y": ytr}, {"x": xte, "y": yte}
+
+
+def token_batch(rng_seed: int, batch: int, seq: int, vocab: int):
+    """LM smoke-test batch: structured random tokens (Zipf-ish) with
+    shifted labels."""
+    rng = np.random.default_rng(rng_seed)
+    z = rng.zipf(1.3, size=(batch, seq + 1))
+    toks = np.minimum(z, vocab - 1).astype(np.int32)
+    return {"tokens": jnp.asarray(toks[:, :-1]),
+            "labels": jnp.asarray(toks[:, 1:])}

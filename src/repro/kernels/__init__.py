@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for the compute hot spots (DESIGN.md §5):
+
+  hier_agg        — Arena's edge/cloud weighted model aggregation
+  flash_attention — GQA causal/sliding-window attention (VMEM-tiled)
+  wkv6            — RWKV6 chunked data-dependent-decay recurrence
+
+Each kernel ships with a pure-jnp oracle in ``ref.py`` and a jit'd
+wrapper in ``ops.py``; correctness is validated in interpret mode on CPU
+(the TPU is the compile target, not the runtime here).
+"""

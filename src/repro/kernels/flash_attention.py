@@ -1,0 +1,110 @@
+"""GQA flash attention (TPU Pallas).
+
+Grid (batch·heads, q_blocks, kv_blocks) with the kv dimension innermost
+and sequential ("arbitrary") semantics: the online-softmax accumulators
+(acc, m, l) live in VMEM scratch and persist across the kv steps of one
+(bh, q) tile — the canonical TPU flash pattern. BlockSpecs tile Q as
+(BQ, D) and K/V as (BK, D), with the GQA head-group folded into the K/V
+index map. Causal and sliding-window masks come from absolute positions
+(``q_offset`` supports decode / prefill continuation). BQ/BK default to
+128 — MXU-aligned for every assigned architecture (D = 128, whisper 64).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                  bq: int, bk: int, n_kv: int, causal: bool, window: int,
+                  q_offset: int, sm_scale: float):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0].astype(jnp.float32)                    # (BQ, D)
+    k = k_ref[0].astype(jnp.float32)                    # (BK, D)
+    v = v_ref[0].astype(jnp.float32)
+    s = jax.lax.dot_general(q * sm_scale, k,
+                            (((1,), (1,)), ((), ())))   # (BQ, BK)
+    qpos = q_offset + qi * bq + jax.lax.broadcasted_iota(
+        jnp.int32, (bq, bk), 0)
+    kpos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    mask = kpos <= qpos if causal else jnp.ones((bq, bk), jnp.bool_)
+    if window:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    p = jnp.exp(s - m_new[:, None])
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=1)
+    acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot(p, v)
+    m_ref[...] = m_new
+
+    @pl.when(ki == n_kv - 1)
+    def _finish():
+        o_ref[0] = (acc_ref[...]
+                    / jnp.maximum(l_ref[...], 1e-30)[:, None]
+                    ).astype(o_ref.dtype)
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    q_offset: int = 0, bq: int = 128, bk: int = 128,
+                    interpret: bool = True):
+    """q: (B, H, Sq, D); k/v: (B, Hkv, Skv, D), H % Hkv == 0.
+    Returns (B, H, Sq, D) in q.dtype. Sq % BQ == 0, Skv % BK == 0."""
+    b, h, sq, d = q.shape
+    hkv, skv = k.shape[1], k.shape[2]
+    rep = h // hkv
+    bq = min(bq, sq)
+    bk = min(bk, skv)
+    assert sq % bq == 0 and skv % bk == 0, (sq, bq, skv, bk)
+    n_q, n_kv = sq // bq, skv // bk
+    sm_scale = 1.0 / (d ** 0.5)
+
+    kernel = functools.partial(
+        _flash_kernel, bq=bq, bk=bk, n_kv=n_kv, causal=causal,
+        window=window, q_offset=q_offset, sm_scale=sm_scale)
+    qs = q.reshape(b * h, sq, d)
+    ks = k.reshape(b * hkv, skv, d)
+    vs = v.reshape(b * hkv, skv, d)
+
+    def q_map(bh, qi, ki):
+        return (bh, qi, 0)
+
+    def kv_map(bh, qi, ki):
+        return ((bh // h) * hkv + (bh % h) // rep, ki, 0)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(b * h, n_q, n_kv),
+        in_specs=[
+            pl.BlockSpec((1, bq, d), q_map),
+            pl.BlockSpec((1, bk, d), kv_map),
+            pl.BlockSpec((1, bk, d), kv_map),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), q_map),
+        out_shape=jax.ShapeDtypeStruct((b * h, sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, d), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(qs, ks, vs)
+    return out.reshape(b, h, sq, d)

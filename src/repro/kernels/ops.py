@@ -1,0 +1,38 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+``interpret`` defaults to True here (CPU container; the kernel body runs
+in Python for correctness validation). On a real TPU deployment set
+``REPRO_KERNEL_INTERPRET=0`` and the same code paths compile to Mosaic.
+"""
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+
+from repro.kernels import flash_attention as _fa
+from repro.kernels import hier_agg as _ha
+from repro.kernels import wkv6 as _wkv
+
+INTERPRET = os.environ.get("REPRO_KERNEL_INTERPRET", "1") != "0"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window",
+                                             "q_offset", "bq", "bk"))
+def flash_attention(q, k, v, *, causal=True, window=0, q_offset=0,
+                    bq=128, bk=128):
+    return _fa.flash_attention(q, k, v, causal=causal, window=window,
+                               q_offset=q_offset, bq=bq, bk=bk,
+                               interpret=INTERPRET)
+
+
+@functools.partial(jax.jit, static_argnames=("bn",))
+def hier_agg(bank, weights, *, bn=2048):
+    return _ha.hier_agg(bank, weights, bn=bn, interpret=INTERPRET)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def wkv6(r, k, v, w, u, *, chunk=64):
+    return _wkv.wkv6_chunked(r, k, v, w, u, chunk=chunk,
+                             interpret=INTERPRET)

@@ -1,0 +1,35 @@
+"""Pure-jnp oracles for every kernel (the allclose targets).
+
+These delegate to the model-layer reference implementations where they
+exist — the kernels must match what the models actually compute.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn_mod
+from repro.models import rwkv as rwkv_mod
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=0, q_offset=0):
+    """q: (B, H, Sq, D); k/v: (B, Hkv, Skv, D) -> (B, H, Sq, D)."""
+    qb = q.transpose(0, 2, 1, 3)      # chunked_attention wants (B,S,H,D)
+    kb = k.transpose(0, 2, 1, 3)
+    vb = v.transpose(0, 2, 1, 3)
+    out = attn_mod.chunked_attention(
+        qb, kb, vb, causal=causal, window=window, q_offset=q_offset,
+        chunk=min(1024, k.shape[2]))
+    return out.transpose(0, 2, 1, 3)
+
+
+def wkv6_ref(r, k, v, w, u, state=None):
+    """r/k/v/w: (B, S, nh, hd); u: (nh, hd). Returns (y, final_state)."""
+    return rwkv_mod.wkv_scan(r, k, v, w, u, state)
+
+
+def hier_agg_ref(bank, weights):
+    """bank: (R, N); weights: (R,) -> weighted mean (N,)."""
+    wsum = jnp.maximum(jnp.sum(weights), 1e-9)
+    return jnp.einsum("r,rn->n", weights.astype(jnp.float32),
+                      bank.astype(jnp.float32)) / wsum

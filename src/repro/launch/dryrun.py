@@ -1,0 +1,244 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture × input shape ×
+mesh) combination with ShapeDtypeStruct inputs (no allocation) and record
+memory_analysis / cost_analysis / collective schedule for the roofline.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-1.7b \
+        --shape train_4k [--multi-pod] [--out reports/dryrun]
+    PYTHONPATH=src python -m repro.launch.dryrun --all
+
+The two XLA_FLAGS lines above MUST run before any other import: jax locks
+the device count on first init, and the production meshes need 512
+placeholder host devices (256 used for single-pod).
+"""
+
+import argparse
+import json
+import time
+import traceback
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import INPUT_SHAPES, all_arch_names, get_config
+from repro.launch import hlo_analysis, mesh as mesh_lib, serve, train
+from repro.models import build_model
+
+# long_500k applicability (DESIGN.md §4): whisper is skipped; dense/moe/vlm
+# run with the sliding-window cache; ssm/hybrid run natively.
+LONG_SKIP = {"whisper-base"}
+
+
+def input_specs(arch: str, shape_name: str, *, multi_pod: bool = False):
+    """ShapeDtypeStruct stand-ins for every model input of this
+    (arch, shape): weak-type-correct, shardable, no device allocation."""
+    cfg = get_config(arch)
+    shp = INPUT_SHAPES[shape_name]
+    b, s = shp.global_batch, shp.seq_len
+    i32 = jnp.int32
+    f32 = jnp.float32
+    sd = jax.ShapeDtypeStruct
+    if shp.kind == "train":
+        batch = {"tokens": sd((b, s), i32), "labels": sd((b, s), i32)}
+        if cfg.family == "audio":
+            batch["enc_embed"] = sd((b, cfg.enc_seq, cfg.d_model), f32)
+        if cfg.family == "vlm":
+            batch["vision_embed"] = sd((b, cfg.vision_tokens, cfg.d_model),
+                                       f32)
+        return batch
+    if shp.kind == "prefill":
+        batch = {"tokens": sd((b, s), i32)}
+        if cfg.family == "audio":
+            batch["enc_embed"] = sd((b, cfg.enc_seq, cfg.d_model), f32)
+        if cfg.family == "vlm":
+            batch["vision_embed"] = sd((b, cfg.vision_tokens, cfg.d_model),
+                                       f32)
+        return batch
+    # decode: one token against a seq_len cache
+    return {"tokens": sd((b, 1), i32)}
+
+
+def _cache_structs(cfg, batch: int, cache_len: int, window: int):
+    model = build_model(cfg)
+    return jax.eval_shape(
+        lambda: model.init_cache(batch, window or cache_len,
+                                 window=window))
+
+
+def _decode_window(cfg, shape_name: str) -> int:
+    if shape_name != "long_500k":
+        return 0
+    if cfg.family in ("ssm",):
+        return 0
+    # hybrid shared-attention + all full-attention archs: sliding window
+    return cfg.sliding_window
+
+
+def run_pair(arch: str, shape_name: str, *, multi_pod: bool,
+             out_dir: Optional[str] = None, verbose: bool = True,
+             train_overrides: Optional[dict] = None,
+             tag: str = "baseline"):
+    """Lower + compile one (arch, shape, mesh); returns the report dict."""
+    cfg = get_config(arch)
+    shp = INPUT_SHAPES[shape_name]
+    if shape_name == "long_500k" and arch in LONG_SKIP:
+        return {"arch": arch, "shape": shape_name, "skipped": True,
+                "reason": "decoder spec-bound to 448 tokens (DESIGN.md §4)"}
+    mesh = mesh_lib.make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.devices.size
+    t0 = time.time()
+    report = {"arch": arch, "shape": shape_name,
+              "mesh": "2x16x16" if multi_pod else "16x16",
+              "chips": chips, "tag": tag}
+    with mesh:
+        if shp.kind == "train":
+            topo = (train_overrides or {}).pop("topology",
+                                               cfg.hfl_topology) \
+                if train_overrides else cfg.hfl_topology
+            hfl_mesh = mesh_lib.derive_hfl_mesh(mesh, topo)
+            repl = (mesh.devices.size // 256) * topo[0] * topo[1]
+            b_repl = shp.global_batch // repl
+            # microbatch = 1 sequence: sequential SGD (paper: batch 32 <<
+            # one 4k sequence) and the remat residual stack stays 1-seq
+            n_mb = max(1, b_repl)
+            ov = dict(lr=1e-3, mb_per_epoch=n_mb, g1=2, g2=2,
+                      attn_chunk=min(1024, shp.seq_len))
+            ov.update(train_overrides or {})
+            step, param_sh, batch_sh = train.make_hfl_train_step(
+                cfg, hfl_mesh, **ov)
+            pshape = jax.eval_shape(build_model(cfg).init,
+                                    jax.random.PRNGKey(0))
+            n_pod = hfl_mesh.shape["pod"]
+            hfl_pshape = jax.tree.map(
+                lambda a: jax.ShapeDtypeStruct(
+                    (n_pod, topo[0], topo[1]) + a.shape, a.dtype), pshape)
+            batch = input_specs(arch, shape_name, multi_pod=multi_pod)
+            batch_shardings = jax.tree.map(lambda _: batch_sh, batch)
+            # donate params: in/out alias removes a full parameter copy
+            jitted = jax.jit(step, in_shardings=(param_sh, batch_shardings),
+                             out_shardings=param_sh, donate_argnums=0)
+            lowered = jitted.lower(hfl_pshape, batch)
+            report["g1g2"] = (ov["g1"], ov["g2"])
+            tokens = shp.global_batch * shp.seq_len * ov["g1"] * ov["g2"]
+            report["model_flops"] = hlo_analysis.model_flops(
+                cfg, tokens, train=True)
+        elif shp.kind == "prefill":
+            # tp floor so the serve batch axis divides the request batch
+            # (e.g. qwen3 tp=4 -> batch axis 64 > B=32 would force
+            # replication)
+            tp = max(cfg.hfl_topology[3], 256 // shp.global_batch)
+            smesh = mesh_lib.derive_serve_mesh(mesh, tp)
+            stepfn, param_sh, batch_sh, out_sh = serve.make_prefill_step(
+                cfg, smesh, batch=shp.global_batch, seq=shp.seq_len,
+                attn_chunk=min(1024, shp.seq_len))
+            pshape = jax.eval_shape(build_model(cfg).init,
+                                    jax.random.PRNGKey(0))
+            batch = input_specs(arch, shape_name)
+            batch_shardings = jax.tree.map(lambda _: batch_sh, batch)
+            jitted = jax.jit(stepfn, in_shardings=(param_sh,
+                                                   batch_shardings),
+                             out_shardings=out_sh)
+            lowered = jitted.lower(pshape, batch)
+            report["model_flops"] = hlo_analysis.model_flops(
+                cfg, shp.global_batch * shp.seq_len, train=False)
+        else:  # decode
+            window = _decode_window(cfg, shape_name)
+            tp = cfg.hfl_topology[3]
+            if arch == "whisper-base":
+                tp = 2  # d_model=512: tp=1 would leave batch axis 256 > B
+            smesh = mesh_lib.derive_serve_mesh(mesh, tp)
+            stepfn, param_sh, cache_sh, token_sh = serve.make_decode_step(
+                cfg, smesh, batch=shp.global_batch,
+                cache_len=shp.seq_len, window=window)
+            pshape = jax.eval_shape(build_model(cfg).init,
+                                    jax.random.PRNGKey(0))
+            cache = _cache_structs(cfg, shp.global_batch, shp.seq_len,
+                                   window)
+            cache_shardings = serve.cache_specs(cfg, smesh,
+                                                shp.global_batch)
+            cache_shardings = mesh_lib.shardings(smesh, cache_shardings)
+            tokens = jax.ShapeDtypeStruct((shp.global_batch, 1), jnp.int32)
+            # donate the cache: the updated cache aliases the old one
+            jitted = jax.jit(stepfn,
+                             in_shardings=(param_sh, cache_shardings,
+                                           token_sh),
+                             out_shardings=(NamedSharding(smesh, P()),
+                                            cache_shardings),
+                             donate_argnums=1)
+            lowered = jitted.lower(pshape, cache, tokens)
+            report["window"] = window
+            report["model_flops"] = hlo_analysis.model_flops(
+                cfg, shp.global_batch, train=False)
+        compiled = lowered.compile()
+    report["lower_compile_s"] = round(time.time() - t0, 1)
+    rl = hlo_analysis.analyze(compiled, chips)
+    report["roofline"] = rl.to_dict()
+    report["useful_flop_ratio"] = (
+        report["model_flops"] / max(rl.flops_per_device * chips, 1.0))
+    mem = compiled.memory_analysis()
+    report["memory"] = {
+        k: int(getattr(mem, k, 0))
+        for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                  "temp_size_in_bytes", "alias_size_in_bytes",
+                  "generated_code_size_in_bytes")}
+    hbm = (report["memory"]["argument_size_in_bytes"]
+           + report["memory"]["temp_size_in_bytes"]
+           - report["memory"]["alias_size_in_bytes"])
+    report["hbm_per_device_gb"] = round(hbm / 2**30, 3)
+    report["fits_16gb"] = hbm < 16 * 2**30
+    if verbose:
+        print(f"[dryrun] {arch} × {shape_name} × {report['mesh']} "
+              f"({tag}): compile {report['lower_compile_s']}s, "
+              f"hbm/dev {report['hbm_per_device_gb']} GB, "
+              f"dominant={rl.dominant} "
+              f"(C={rl.compute_s:.3g}s M={rl.memory_s:.3g}s "
+              f"X={rl.collective_s:.3g}s)", flush=True)
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        fn = f"{arch}_{shape_name}_{report['mesh']}_{tag}.json"
+        with open(os.path.join(out_dir, fn), "w") as f:
+            json.dump(report, f, indent=1)
+    return report
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None,
+                    choices=list(INPUT_SHAPES) + [None])
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="reports/dryrun")
+    args = ap.parse_args()
+
+    archs = all_arch_names() if (args.all or not args.arch) \
+        else [args.arch]
+    shapes = list(INPUT_SHAPES) if (args.all or not args.shape) \
+        else [args.shape]
+    meshes = [False, True] if (args.both_meshes or args.all) \
+        else [args.multi_pod]
+
+    failures = []
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                try:
+                    run_pair(arch, shape, multi_pod=mp, out_dir=args.out)
+                except Exception as e:  # noqa: BLE001
+                    failures.append((arch, shape, mp, repr(e)))
+                    print(f"[dryrun] FAIL {arch} × {shape} × "
+                          f"{'2x16x16' if mp else '16x16'}: {e}",
+                          flush=True)
+                    traceback.print_exc()
+    if failures:
+        raise SystemExit(f"{len(failures)} dry-run failures")
+    print("[dryrun] all combinations lowered + compiled OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,192 @@
+"""Production meshes + the derived HFL mesh (DESIGN.md §3).
+
+``make_production_mesh`` is the mandated entry point: 16×16 ("data",
+"model") per pod, 2×16×16 ("pod", "data", "model") across pods. The HFL
+hierarchy needs finer axes, so ``derive_hfl_mesh`` refactors the *same
+device array* into
+
+    ("pod", "edge", "fl", "fsdp", "tp")   with edge·fl·fsdp·tp = 256
+
+mirroring Arena's topology: "edge"×"fl" index diverging model replicas
+(edge clusters × FL devices per cluster), "fsdp"×"tp" shard each replica
+so 72B/314B models fit HBM. Arena's profiling module's clustering decision
+becomes this factorization, chosen per architecture in its config.
+
+Everything is a function — importing this module never touches jax device
+state (the dry-run must set XLA_FLAGS before first jax init).
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+HFL_AXES = ("pod", "edge", "fl", "fsdp", "tp")
+REPLICA_AXES = ("pod", "edge", "fl")
+TENSOR_AXES = ("fsdp", "tp")
+SERVE_AXES = ("pod", "batch", "tp")
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def derive_hfl_mesh(mesh: Mesh, topology: tuple) -> Mesh:
+    """topology: (M edges, D fl-devices, F fsdp, T tp), M·D·F·T = 256."""
+    m, d, f, t = topology
+    devices = np.asarray(mesh.devices)
+    n_pods = devices.shape[0] if devices.ndim == 3 else 1
+    per_pod = devices.size // n_pods
+    if m * d * f * t != per_pod:
+        raise ValueError(
+            f"topology {topology} does not factor {per_pod} chips/pod")
+    return Mesh(devices.reshape(n_pods, m, d, f, t), HFL_AXES)
+
+
+def derive_serve_mesh(mesh: Mesh, tp: int) -> Mesh:
+    """Serving has no replicas: ("pod", "batch", "tp")."""
+    devices = np.asarray(mesh.devices)
+    n_pods = devices.shape[0] if devices.ndim == 3 else 1
+    per_pod = devices.size // n_pods
+    if per_pod % tp:
+        raise ValueError(f"tp={tp} does not divide {per_pod}")
+    return Mesh(devices.reshape(n_pods, per_pod // tp, tp), SERVE_AXES)
+
+
+def n_replicas(hfl_mesh: Mesh) -> tuple:
+    s = hfl_mesh.shape
+    return s["pod"], s["edge"], s["fl"]
+
+
+# ---------------------------------------------------------------------------
+# parameter PartitionSpecs
+# ---------------------------------------------------------------------------
+
+_FT = TENSOR_AXES           # combined 'fsdp','tp' mega-tensor axis
+_TP = "tp"
+
+
+def _spec_for(path: str, leaf, cfg, ep: bool) -> P:
+    """Tensor-sharding spec for one (serve-layout) parameter leaf.
+    ``path`` is the '/'-joined key path; stacked layer leaves carry a
+    leading L axis (never sharded)."""
+    name = path.split("/")[-1]
+    nd = leaf.ndim
+
+    def last2(row_axes, col_axes):
+        """Spec sharding the last two dims, leading dims unsharded."""
+        return P(*([None] * (nd - 2) + [row_axes, col_axes]))
+
+    # embeddings
+    if name == "embed":
+        return P(_FT, None)
+    if name == "unembed":
+        return P(None, _FT)
+    if name in ("vis_proj",):
+        return P(None, _TP)
+    if name == "dec_pos":
+        return P()
+    # attention
+    if name in ("wq", "wk", "wv"):
+        return last2(None, _TP)
+    if name == "wo":
+        return last2(_TP, None)
+    if name in ("bq", "bk", "bv"):
+        return P(*([None] * (nd - 1) + [_TP]))
+    # dense mlp
+    if name in ("w_gate", "w_up"):
+        if "moe" in path:
+            if ep:      # expert parallel: experts over tp
+                return P(*([None] * (nd - 3) + [_TP, None, None]))
+            return last2(None, _FT)
+        return last2(None, _FT)
+    if name == "w_down":
+        if "moe" in path:
+            if ep:
+                return P(*([None] * (nd - 3) + [_TP, None, None]))
+            return last2(_FT, None)
+        return last2(_FT, None)
+    if name in ("b_up",):
+        return P(*([None] * (nd - 1) + [_FT]))
+    # rwkv time-mix / channel-mix
+    if name in ("w_r", "w_k", "w_v", "w_g") and "tmix" in path:
+        return last2(None, _TP)
+    if name == "w_o" and "tmix" in path:
+        return last2(_TP, None)
+    if name == "bonus_u":
+        return P(*([None] * (nd - 2) + [_TP, None]))
+    if name == "w_k" and "cmix" in path:
+        return last2(None, _FT)
+    if name == "w_v" and "cmix" in path:
+        return last2(_FT, None)
+    if name == "w_r" and "cmix" in path:
+        return last2(None, _TP)
+    # mamba2
+    if name in ("w_z", "w_x"):
+        return last2(None, _TP)
+    if name == "w_dt":
+        return last2(None, None)
+    if name == "w_out":
+        return last2(_TP, None)
+    if name == "norm" and nd >= 1:
+        return P(*([None] * (nd - 1) + [_TP]))
+    # everything else (norms, scalars, conv, lora, router, biases)
+    return P(*([None] * nd))
+
+
+def _tree_paths(tree):
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = []
+    for path, leaf in flat:
+        keys = []
+        for p in path:
+            keys.append(str(getattr(p, "key", getattr(p, "idx", p))))
+        out.append(("/".join(keys), leaf))
+    return out
+
+
+def serve_param_specs(cfg, params_shape) -> dict:
+    """Pytree of PartitionSpec matching the (unreplicated) param pytree."""
+    ep = cfg.moe is not None and cfg.moe.parallelism == "expert"
+    flat = _tree_paths(params_shape)
+    specs = [_spec_for(p, l, cfg, ep) for p, l in flat]
+    treedef = jax.tree.structure(params_shape)
+    return jax.tree.unflatten(treedef, specs)
+
+
+def _guard_divisibility(spec: P, shape, axis_sizes: dict) -> P:
+    """Replace shardings that don't divide the dim (jax rejects them —
+    e.g. whisper's odd 51865 vocab over fsdp)."""
+    out = []
+    for i, s_ in enumerate(spec):
+        if s_ is not None:
+            axes = s_ if isinstance(s_, tuple) else (s_,)
+            size = 1
+            for a in axes:
+                size *= axis_sizes.get(a, 1)
+            if i < len(shape) and shape[i] % size != 0:
+                s_ = None
+        out.append(s_)
+    return P(*out)
+
+
+def hfl_param_specs(cfg, params_shape, mesh: Mesh = None) -> dict:
+    """HFL layout: every leaf gains leading (pod, edge, fl) replica dims;
+    shardings the shapes can't honor are dropped (needs ``mesh``)."""
+    base = serve_param_specs(cfg, params_shape)
+    sizes = dict(mesh.shape) if mesh is not None else {}
+
+    def lift(spec: P, leaf) -> P:
+        if mesh is not None:
+            spec = _guard_divisibility(spec, leaf.shape, sizes)
+        return P("pod", "edge", "fl", *spec)
+
+    return jax.tree.map(lift, base, params_shape,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def shardings(mesh: Mesh, specs):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))

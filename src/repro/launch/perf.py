@@ -1,0 +1,134 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""§Perf hillclimb driver (EXPERIMENTS.md).
+
+Runs the three chosen (arch × shape) pairs through hypothesis-driven
+variants, normalizes roofline terms to seconds-per-million-trained-tokens
+(variants change γ1·γ2, i.e. tokens per cloud round), and prints the
+before/after table.
+
+    PYTHONPATH=src python -m repro.launch.perf [--pair rwkv|grok|qwen3]
+"""
+
+import argparse
+import json
+
+from repro.configs import INPUT_SHAPES, get_config
+from repro.launch.dryrun import run_pair
+
+OUT = "reports/perf"
+
+# (arch, shape, tag, overrides, note)
+PLANS = {
+    "rwkv": [
+        ("rwkv6-1.6b", "train_4k", "baseline", {},
+         "paper-faithful: sequential WKV scan, γ=(2,2)"),
+        ("rwkv6-1.6b", "train_4k", "wkv-chunked", {"wkv_chunked": True},
+         "H1: memory term = WKV state HBM round-trips every token; "
+         "chunked form keeps state resident for 64 steps -> predict "
+         "M ÷ ~10-50x, C × ~2-4 (intra-chunk matmul)"),
+    ],
+    "grok": [
+        ("grok-1-314b", "train_4k", "baseline", {},
+         "paper-faithful: mb=1 seq, γ=(2,2)"),
+        ("grok-1-314b", "train_4k", "mb2", {"mb_per_epoch": 128},
+         "H2 (REFUTED): collective term = fsdp weight all-gathers per "
+         "SGD step; mb=2 seqs halves steps -> predicted X ÷ 2. Measured "
+         "X unchanged (952 s/Mtok): X is per-token TP psums, and memory "
+         "ballooned 18->27 GB. Reverted."),
+        ("grok-1-314b", "train_4k", "seqpar-acts",
+         {"seq_shard_acts": True},
+         "H6: given H2's lesson, attack the per-token psums directly — "
+         "sequence-shard residuals: predict X ÷ ~2, HBM down"),
+    ],
+    "whisper": [
+        ("whisper-base", "train_4k", "sync-every-epoch",
+         {"g1": 1, "g2": 1, "topology": (8, 32, 1, 1)},
+         "F=1, tp=1 (single-pod topo): ALL collective traffic is replica "
+         "sync — the pure Arena lever. γ=(1,1) = FedAvg-per-epoch; "
+         "2 syncs/epoch"),
+        ("whisper-base", "train_4k", "baseline",
+         {"topology": (8, 32, 1, 1)},
+         "paper-faithful γ=(2,2): 3 syncs / 4 epochs -> per-token sync "
+         "cost ÷ ~2.7 predicted"),
+        ("whisper-base", "train_4k", "arena-sched",
+         {"g1": 4, "g2": 2, "topology": (8, 32, 1, 1)},
+         "γ=(4,2): 3 syncs / 8 epochs -> ÷ ~5.3 vs (1,1) predicted"),
+        ("whisper-base", "train_4k", "arena-bf16-cloud",
+         {"g1": 4, "g2": 2, "collective_dtype": "bfloat16",
+          "topology": (8, 32, 1, 1)},
+         "beyond-paper: bf16 cloud sync -> cloud all-reduce bytes ÷ 2"),
+    ],
+    "qwen3": [
+        ("qwen3-1.7b", "train_4k", "sync-every-epoch",
+         {"g1": 1, "g2": 1},
+         "γ=(1,1): classic FedAvg-per-epoch — the no-hierarchy baseline"),
+        ("qwen3-1.7b", "train_4k", "baseline", {},
+         "paper-faithful γ=(2,2)"),
+        ("qwen3-1.7b", "train_4k", "arena-sched", {"g1": 4, "g2": 2},
+         "H3: Arena raises γ where the roofline is sync-bound; per-token "
+         "replica-sync traffic ÷ (γ1γ2) vs (1,1) -> predict per-token "
+         "X ÷ ~8 vs sync-every-epoch"),
+        ("qwen3-1.7b", "train_4k", "arena-bf16-cloud",
+         {"g1": 4, "g2": 2, "collective_dtype": "bfloat16"},
+         "H4 (beyond-paper): cast params to bf16 for the cloud "
+         "aggregation only -> cloud all-reduce bytes ÷ 2 on DCN"),
+        ("qwen3-1.7b", "train_4k", "seqpar-acts",
+         {"g1": 4, "g2": 2, "seq_shard_acts": True},
+         "H5 (beyond-paper): H3 refuted the sync lever here — X is "
+         "per-token TP activation psums. Sequence-shard residuals "
+         "between blocks: all-reduce -> reduce-scatter+all-gather, "
+         "residual memory ÷ tp -> predict X ÷ ~2, M down"),
+    ],
+}
+
+
+def tokens_per_round(arch, shape, ov):
+    shp = INPUT_SHAPES[shape]
+    g1 = ov.get("g1", 2)
+    g2 = ov.get("g2", 2)
+    return shp.global_batch * shp.seq_len * g1 * g2
+
+
+def run_plan(name, multi_pod=False):
+    rows = []
+    for arch, shape, tag, ov, note in PLANS[name]:
+        rep = run_pair(arch, shape, multi_pod=multi_pod, out_dir=OUT,
+                       train_overrides=ov, tag=tag)
+        rl = rep["roofline"]
+        tok = tokens_per_round(arch, shape, ov) / 1e6
+        rows.append({
+            "tag": tag, "note": note,
+            "Mtok_per_round": tok,
+            "compute_s_per_Mtok": rl["compute_s"] / tok,
+            "memory_s_per_Mtok": rl["memory_s"] / tok,
+            "collective_s_per_Mtok": rl["collective_s"] / tok,
+            "dominant": rl["dominant"],
+            "hbm_gb": rep["hbm_per_device_gb"],
+        })
+    print(f"\n=== {name} ===")
+    hdr = ("tag", "C s/Mtok", "M s/Mtok", "X s/Mtok", "dom", "HBM GB")
+    print("%-22s %10s %10s %10s %10s %8s" % hdr)
+    for r in rows:
+        print("%-22s %10.3g %10.3g %10.3g %10s %8.2f"
+              % (r["tag"], r["compute_s_per_Mtok"],
+                 r["memory_s_per_Mtok"], r["collective_s_per_Mtok"],
+                 r["dominant"], r["hbm_gb"]))
+    with open(f"{OUT}/{name}_summary.json", "w") as f:
+        json.dump(rows, f, indent=1)
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--pair", default=None, choices=list(PLANS) + [None])
+    ap.add_argument("--multi-pod", action="store_true")
+    args = ap.parse_args()
+    os.makedirs(OUT, exist_ok=True)
+    for name in ([args.pair] if args.pair else list(PLANS)):
+        run_plan(name, multi_pod=args.multi_pod)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,178 @@
+"""Serving steps (prefill + decode) on the production mesh.
+
+Serving has no HFL replicas: the mesh refactors to ("pod", "batch", "tp");
+params shard over 'tp' (+'fsdp'-merged), request batches over
+('pod', 'batch'). ``decode_32k`` lowers one-token ``serve_step`` against a
+seq_len KV cache; ``long_500k`` the same with the ring-buffered
+sliding-window cache (dense archs) or O(1) recurrent state (SSM/hybrid) —
+see DESIGN.md §4.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.launch import mesh as mesh_lib
+from repro.models import build_model, decode as decode_lib
+
+
+def _batch_axes(mesh: Mesh, b: int):
+    """Shard the request batch over ('pod','batch') when divisible,
+    else over 'batch' alone, else replicate (bs=1 long-context)."""
+    npod = mesh.shape["pod"]
+    nb = mesh.shape["batch"]
+    if b % (npod * nb) == 0:
+        return ("pod", "batch")
+    if b % nb == 0:
+        return ("batch",)
+    return None
+
+
+def serve_specs_for_params(cfg, mesh: Mesh):
+    """Serve-layout param specs: 'fsdp' references remap to 'tp' (the
+    serve mesh has no fsdp axis), and any sharded dim the axis size does
+    not divide falls back to replication (e.g. whisper's odd 51865
+    vocab) — jax rejects non-divisible input shardings.
+
+    Big models additionally shard the merged-('fsdp','tp') weight axes
+    over ('batch','tp') — FSDP-style: 16-way tp alone leaves grok-1 at
+    ~39 GB/device of expert weights; GSPMD all-gathers per layer and the
+    cost lands in the collective roofline term where it belongs."""
+    pshape = jax.eval_shape(build_model(cfg).init, jax.random.PRNGKey(0))
+    specs = mesh_lib.serve_param_specs(cfg, pshape)
+    tp = mesh.shape["tp"]
+    nb = mesh.shape["batch"]
+    bytes_per_dev = sum(
+        l.size * l.dtype.itemsize for l in jax.tree.leaves(pshape)) / tp
+    fsdp_serve = bytes_per_dev > 4 * 2**30
+    merged = ("batch", "tp") if fsdp_serve else "tp"
+    msize = nb * tp if fsdp_serve else tp
+
+    def remap(spec, leaf):
+        out = []
+        merged_dim = None
+        for i, s_ in enumerate(spec):
+            if isinstance(s_, tuple) and "fsdp" in s_:
+                if leaf.shape[i] % msize == 0:
+                    s_ = merged
+                    merged_dim = i
+                else:
+                    s_ = "tp"
+            if s_ == "tp" and leaf.shape[i] % tp != 0:
+                s_ = None
+            out.append(s_)
+        if fsdp_serve and merged_dim is None and leaf.ndim >= 2:
+            # dim-swap fallback: shard the *other* tail dim when the
+            # intended one isn't msize-divisible (qwen2-72b d_ff=29568)
+            for i in (leaf.ndim - 2, leaf.ndim - 1):
+                if out[i] in ("tp", None) and leaf.shape[i] % msize == 0 \
+                        and leaf.shape[i] >= 4096:
+                    out[i] = merged
+                    # drop a conflicting tp on the swapped-away dim
+                    other = (leaf.ndim - 1 if i == leaf.ndim - 2
+                             else leaf.ndim - 2)
+                    if out[other] == "tp":
+                        out[other] = None
+                    break
+        return P(*out)
+
+    return jax.tree.map(
+        lambda s, l: remap(s, l), specs, pshape,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def cache_specs(cfg, mesh: Mesh, batch: int):
+    """PartitionSpecs for the decode cache pytree.
+
+    KV caches shard the kv-head dim over 'tp' when divisible; otherwise
+    the *cache length* dim shards over 'tp' (flash-decode style sequence
+    sharding — GQA counts like kv=8 over tp=16 can't split heads, but a
+    32k/8k cache always splits by position)."""
+    ba = _batch_axes(mesh, batch)
+    tp = mesh.shape["tp"]
+    fam = cfg.family
+    heads_ok = cfg.n_kv_heads % tp == 0
+
+    def mk(*rest):
+        return P(None, ba, *rest)
+
+    def kv():
+        return (mk(None, "tp", None) if heads_ok
+                else mk("tp", None, None))
+
+    if fam in ("dense", "moe", "vlm"):
+        out = {"k": kv(), "v": kv(),
+               "pos": mk("tp" if not heads_ok else None), "t": P()}
+        if cfg.m_rope:
+            out["dpos"] = P()
+        return out
+    if fam == "ssm":
+        nh_ok = cfg.n_heads % tp == 0
+        return {"ax": mk(None),
+                "S": mk("tp" if nh_ok else None, None, None),
+                "cx": mk(None), "t": P()}
+    if fam == "hybrid":
+        import repro.models.ssm as ssm_mod
+        _, nh, _, _ = ssm_mod.mamba2_dims(cfg)
+        nh_ok = nh % tp == 0
+        return {"h": mk("tp" if nh_ok else None, None, None),
+                "tail": mk(None, None),
+                "ak": kv(), "av": kv(),
+                "apos": mk("tp" if not heads_ok else None), "t": P()}
+    if fam == "audio":
+        hx = "tp" if heads_ok else None
+        return {"k": kv(), "v": kv(),
+                "pos": mk("tp" if not heads_ok else None),
+                "ck": mk(None, hx, None),
+                "cv": mk(None, hx, None),
+                "t": P()}
+    raise ValueError(fam)
+
+
+def make_decode_step(cfg, mesh: Mesh, *, batch: int, cache_len: int,
+                     window: int = 0):
+    """Returns (serve_step, param_sh, cache_sh, token_sh)."""
+    model = build_model(cfg)
+
+    def serve_step(params, cache, tokens):
+        return model.decode_step(params, cache, tokens, window=window)
+
+    pspecs = serve_specs_for_params(cfg, mesh)
+    param_sh = mesh_lib.shardings(mesh, pspecs)
+    cspecs = cache_specs(cfg, mesh, batch)
+    cache_sh = mesh_lib.shardings(mesh, cspecs)
+    ba = _batch_axes(mesh, batch)
+    token_sh = NamedSharding(mesh, P(ba, None))
+    return serve_step, param_sh, cache_sh, token_sh
+
+
+def make_prefill_step(cfg, mesh: Mesh, *, batch: int, seq: int,
+                      window: int = 0, attn_chunk: int = 1024):
+    """Returns (prefill_step, param_sh, batch_sh, out_sh).
+
+    ``out_sh`` = (logits sharding, cache shardings): without explicit
+    output shardings GSPMD may replicate the multi-GB prefill KV cache —
+    measured 135 GB/device on olmoe before this constraint."""
+    model = build_model(cfg)
+
+    def prefill_step(params, batch_):
+        tokens = batch_["tokens"]
+        extras = {k: batch_[k] for k in ("enc_embed", "vision_embed")
+                  if k in batch_}
+        return model.prefill(params, tokens, extras=extras or None,
+                             window=window, attn_chunk=attn_chunk)
+
+    pspecs = serve_specs_for_params(cfg, mesh)
+    param_sh = mesh_lib.shardings(mesh, pspecs)
+    ba = _batch_axes(mesh, batch)
+    batch_sh = NamedSharding(mesh, P(ba))
+    tp = mesh.shape["tp"]
+    vocab_ok = cfg.vocab % tp == 0
+    logits_sh = NamedSharding(mesh, P(ba, "tp" if vocab_ok else None))
+    cspecs = cache_specs(cfg, mesh, batch)
+    cache_sh = mesh_lib.shardings(mesh, cspecs)
+    return prefill_step, param_sh, batch_sh, (logits_sh, cache_sh)

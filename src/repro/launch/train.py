@@ -1,0 +1,272 @@
+"""Hierarchical train step — Arena's synchronization scheme on the TPU mesh.
+
+One compiled ``hfl_train_step`` = one cloud round (Eq. 5):
+
+    scan γ2 [ scan γ1 [ per-replica local SGD epoch (scan over minibatches) ]
+              edge-aggregate  (all-reduce over the 'fl' axis)   ]
+    cloud-aggregate            (all-reduce over 'edge' + 'pod' axes)
+
+Model replicas live as explicit leading (pod, edge, fl) axes on every
+parameter leaf, sharded 1:1 onto the replica mesh axes — divergence
+between syncs is ordinary per-shard state, and each aggregation lowers to
+exactly one all-reduce over exactly the axes whose hierarchy level it
+crosses. ICI carries the frequent edge syncs, DCN the rare cloud syncs —
+this is the paper's insight transposed to the TPU interconnect hierarchy.
+
+``static`` frequencies compile the loops directly (dry-run / roofline
+path); the ``dynamic`` path takes traced per-edge (γ1, γ2) from the Arena
+agent with masked upper-bound loops (no recompilation between actions).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.launch import mesh as mesh_lib
+from repro.models import build_model
+
+
+def _sgd(params, grads, lr: float):
+    return jax.tree.map(
+        lambda p, g: (p.astype(jnp.float32)
+                      - lr * g.astype(jnp.float32)).astype(p.dtype),
+        params, grads)
+
+
+def _edge_mean(params):
+    """Eq. 1 on the mesh: average replicas over the 'fl' axis (leaf layout
+    (pod, edge, fl, ...)). Uniform |D_i| per the input pipeline; the
+    size-weighted general form lives in repro.core.hfl."""
+    return jax.tree.map(
+        lambda a: jnp.broadcast_to(
+            jnp.mean(a.astype(jnp.float32), axis=2, keepdims=True),
+            a.shape).astype(a.dtype), params)
+
+
+def _cloud_mean(params):
+    """Eq. 2 on the mesh: average over ('pod', 'edge', 'fl')."""
+    return jax.tree.map(
+        lambda a: jnp.broadcast_to(
+            jnp.mean(a.astype(jnp.float32), axis=(0, 1, 2), keepdims=True),
+            a.shape).astype(a.dtype), params)
+
+
+def _edge_mask(old, new, active_edge):
+    """Keep ``old`` wherever the edge has finished its γ2 budget."""
+    def m(o, n):
+        am = active_edge.reshape((1, -1, 1) + (1,) * (o.ndim - 3))
+        return jnp.where(am, n, o)
+
+    return jax.tree.map(m, old, new)
+
+
+def make_hfl_train_step(cfg, hfl_mesh, *, lr: float = 1e-3,
+                        mb_per_epoch: int = 4, remat: bool = True,
+                        g1: int = 2, g2: int = 2,
+                        dynamic: bool = False, max_g1: int = 4,
+                        max_g2: int = 4, attn_chunk: int = 1024,
+                        collective_dtype: Optional[str] = None,
+                        wkv_chunked: bool = False,
+                        seq_shard_acts: bool = False):
+    """Returns (train_step, in_shardings, out_shardings).
+
+    static:  train_step(params, batch)            — g1/g2 baked in
+    dynamic: train_step(params, batch, g1e, g2e)  — per-edge traced freqs
+
+    ``collective_dtype``: optional cast applied to params before the
+    *cloud* aggregation only (beyond-paper optimization: quantized DCN
+    sync; see EXPERIMENTS.md §Perf).
+    """
+    model = build_model(cfg)
+    n_pod, n_edge, n_fl = mesh_lib.n_replicas(hfl_mesh)
+    repl = n_pod * n_edge * n_fl
+
+    act_spec = (NamedSharding(hfl_mesh, P(None, ("fsdp", "tp"), None))
+                if seq_shard_acts else None)
+
+    def replica_loss(params, batch):
+        return model.loss(params, batch, remat=remat,
+                          attn_chunk=attn_chunk, wkv_chunked=wkv_chunked,
+                          act_spec=act_spec)
+
+    def epoch_all(params, batch):
+        """γ1-inner body: one local epoch on every replica (vmapped over
+        the three replica axes)."""
+        n_mb = mb_per_epoch
+
+        def one(params, batch):
+            def step(p, i):
+                b = jax.tree.map(
+                    lambda a: jax.lax.dynamic_index_in_dim(
+                        a.reshape((n_mb, a.shape[0] // n_mb) + a.shape[1:]),
+                        i, 0, keepdims=False), batch)
+                g = jax.grad(replica_loss)(p, b)
+                return _sgd(p, g, lr), None
+
+            p, _ = jax.lax.scan(step, params, jnp.arange(n_mb))
+            return p
+
+        return jax.vmap(jax.vmap(jax.vmap(one)))(params, batch)
+
+    def reshape_batch(batch):
+        def r(a):
+            b = a.shape[0]
+            return a.reshape((n_pod, n_edge, n_fl, b // repl) + a.shape[1:])
+
+        return jax.tree.map(r, batch)
+
+    cast = (lambda t: t) if collective_dtype is None else (
+        lambda t: jax.tree.map(
+            lambda a: a.astype(collective_dtype)
+            if jnp.issubdtype(a.dtype, jnp.floating) else a, t))
+
+    def cloud_agg(params):
+        if collective_dtype is None:
+            return _cloud_mean(params)
+        # quantized DCN sync: cast -> mean over pod/edge -> restore dtype
+        lowp = cast(params)
+        avg = _cloud_mean(lowp)
+        return jax.tree.map(lambda a, ref: a.astype(ref.dtype), avg, params)
+
+    if not dynamic:
+        def train_step(params, batch):
+            batch = reshape_batch(batch)
+
+            def edge_period(params, _):
+                def local(params, _):
+                    return epoch_all(params, batch), None
+
+                params, _ = jax.lax.scan(local, params, None, length=g1)
+                return _edge_mean(params), None
+
+            params, _ = jax.lax.scan(edge_period, params, None, length=g2)
+            return cloud_agg(params)
+    else:
+        def train_step(params, batch, g1e, g2e):
+            """g1e/g2e: (n_edge,) int32 — the Arena action."""
+            batch = reshape_batch(batch)
+
+            def edge_period(carry, t2):
+                params = carry
+                active2 = t2 < g2e                       # (E,)
+
+                def local(params, t1):
+                    new = epoch_all(params, batch)
+                    act = (t1 < g1e) & active2
+                    return _edge_mask(params, new, act), None
+
+                params2, _ = jax.lax.scan(local, params,
+                                          jnp.arange(max_g1))
+                agg = _edge_mean(params2)
+                return _edge_mask(params, agg, active2), None
+
+            params, _ = jax.lax.scan(edge_period, params,
+                                     jnp.arange(max_g2))
+            return cloud_agg(params)
+
+    # ---- shardings ---------------------------------------------------
+    key = jax.random.PRNGKey(0)
+    pshape = jax.eval_shape(model.init, key)
+    hfl_specs = mesh_lib.hfl_param_specs(cfg, pshape, hfl_mesh)
+    param_sh = mesh_lib.shardings(hfl_mesh, hfl_specs)
+    batch_spec = P(mesh_lib.REPLICA_AXES)
+    batch_sh = NamedSharding(hfl_mesh, batch_spec)
+    return train_step, param_sh, batch_sh
+
+
+def lift_params(params, n_pod: int, n_edge: int, n_fl: int):
+    """Broadcast a single model copy into the replicated HFL layout."""
+    return jax.tree.map(
+        lambda a: jnp.broadcast_to(a, (n_pod, n_edge, n_fl) + a.shape),
+        params)
+
+
+def main():
+    """Launcher CLI.
+
+        PYTHONPATH=src python -m repro.launch.train --arch qwen3-1.7b \
+            --mesh micro --rounds 10 [--dynamic]
+
+    --mesh micro  : 4 host devices (dev loop, any machine)
+    --mesh single : the 16×16 production pod (needs 256 devices)
+    --mesh multi  : 2×16×16 (needs 512 devices)
+    --dynamic uses the masked per-edge-frequency step with a Var-Freq-B
+    style schedule (the Arena agent plugs in through the same signature).
+    """
+    import argparse
+    import dataclasses
+    import time
+
+    import numpy as np
+    from jax.sharding import Mesh
+
+    from repro.configs import get_config
+    from repro.data.synthetic import token_batch
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-1.7b")
+    ap.add_argument("--mesh", default="micro",
+                    choices=["micro", "single", "multi"])
+    ap.add_argument("--rounds", type=int, default=5)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--g1", type=int, default=2)
+    ap.add_argument("--g2", type=int, default=2)
+    ap.add_argument("--dynamic", action="store_true")
+    ap.add_argument("--reduced", action="store_true", default=None,
+                    help="reduced model (default on micro mesh)")
+    args = ap.parse_args()
+
+    if args.mesh == "micro":
+        cfg = get_config(args.arch).reduce()
+        devs = np.array(jax.devices()[:4]).reshape(1, 2, 2, 1, 1)
+        hfl_mesh = Mesh(devs, mesh_lib.HFL_AXES)
+    else:
+        cfg = get_config(args.arch)
+        base = mesh_lib.make_production_mesh(multi_pod=args.mesh == "multi")
+        hfl_mesh = mesh_lib.derive_hfl_mesh(base, cfg.hfl_topology)
+    n_pod, n_edge, n_fl = mesh_lib.n_replicas(hfl_mesh)
+    repl = n_pod * n_edge * n_fl
+    if args.batch % repl:
+        args.batch = repl * max(1, args.batch // repl)
+
+    kw = dict(lr=3e-3, mb_per_epoch=max(1, args.batch // repl),
+              remat=args.mesh != "micro",
+              attn_chunk=min(1024, args.seq))
+    if args.dynamic:
+        step, psh, bsh = make_hfl_train_step(
+            cfg, hfl_mesh, dynamic=True, max_g1=args.g1 + 2,
+            max_g2=args.g2 + 2, **kw)
+    else:
+        step, psh, bsh = make_hfl_train_step(
+            cfg, hfl_mesh, g1=args.g1, g2=args.g2, **kw)
+    model = build_model(cfg)
+    params = lift_params(model.init(jax.random.PRNGKey(0)),
+                         n_pod, n_edge, n_fl)
+    eval_loss = jax.jit(lambda p, b: model.loss(p, b))
+    rng = np.random.default_rng(0)
+    for i in range(args.rounds):
+        batch = token_batch(i, args.batch, args.seq, cfg.vocab)
+        t0 = time.time()
+        if args.dynamic:
+            # Var-Freq-B style: per-edge freqs (Arena's agent drops in here)
+            g1e = jnp.asarray(rng.integers(1, args.g1 + 1, n_edge),
+                              jnp.int32)
+            g2e = jnp.asarray(rng.integers(1, args.g2 + 1, n_edge),
+                              jnp.int32)
+            params = step(params, batch, g1e, g2e)
+        else:
+            params = step(params, batch)
+        p0 = jax.tree.map(lambda a: a[0, 0, 0], params)
+        l = float(eval_loss(p0, token_batch(9999, args.batch, args.seq,
+                                            cfg.vocab)))
+        print(f"round {i} loss={l:.4f} dt={time.time()-t0:.1f}s",
+              flush=True)
+
+
+if __name__ == "__main__":
+    main()

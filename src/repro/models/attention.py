@@ -1,0 +1,240 @@
+"""GQA attention: training forward, prefill (cache write), decode (1 token).
+
+The training/prefill path uses an online-softmax KV-chunked formulation
+(`chunked_attention`) so the (S, S) score matrix never materializes — this
+is the pure-jnp oracle mirrored by ``repro.kernels.flash_attention``.
+
+Supports: GQA (kv groups), qk_norm (qwen3), qkv bias (qwen2), causal and
+sliding-window masks, cross-attention (whisper), M-RoPE (qwen2-vl).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common
+
+NEG_INF = -1e30
+
+
+def attn_init(key, cfg, dtype=None):
+    dtype = dtype or cfg.dtype
+    d, hd = cfg.d_model, cfg.head_dim
+    nh, nkv = cfg.n_heads, cfg.n_kv_heads
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": common.dense_init(ks[0], (d, nh * hd), dtype),
+        "wk": common.dense_init(ks[1], (d, nkv * hd), dtype),
+        "wv": common.dense_init(ks[2], (d, nkv * hd), dtype),
+        "wo": common.dense_init(ks[3], (nh * hd, d), dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((nh * hd,), dtype)
+        p["bk"] = jnp.zeros((nkv * hd,), dtype)
+        p["bv"] = jnp.zeros((nkv * hd,), dtype)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((hd,), dtype)
+        p["k_norm"] = jnp.ones((hd,), dtype)
+    return p
+
+
+def _project_qkv(params, cfg, x, positions, mpos=None):
+    b, s, _ = x.shape
+    nh, nkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = jnp.einsum("bsd,dh->bsh", x, params["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dh->bsh", x, params["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dh->bsh", x, params["wv"].astype(x.dtype))
+    if cfg.qkv_bias:
+        q = q + params["bq"].astype(x.dtype)
+        k = k + params["bk"].astype(x.dtype)
+        v = v + params["bv"].astype(x.dtype)
+    q = q.reshape(b, s, nh, hd)
+    k = k.reshape(b, s, nkv, hd)
+    v = v.reshape(b, s, nkv, hd)
+    if cfg.qk_norm:
+        q = common.rms_norm(q, params["q_norm"])
+        k = common.rms_norm(k, params["k_norm"])
+    if cfg.m_rope and mpos is not None:
+        q = common.apply_m_rope(q, mpos, cfg.rope_theta)
+        k = common.apply_m_rope(k, mpos, cfg.rope_theta)
+    elif cfg.rope_theta > 0:
+        q = common.apply_rope(q, positions, cfg.rope_theta)
+        k = common.apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def chunked_attention(q, k, v, *, causal: bool, window: int = 0,
+                      q_offset=0, chunk: int = 1024,
+                      kv_positions=None):
+    """Online-softmax attention, scanned over KV chunks.
+
+    q: (B, Sq, H, D); k/v: (B, Skv, Hkv, D) with H % Hkv == 0.
+    ``q_offset``: absolute position of q[0] (prefill continuation/decode).
+    ``window`` > 0 enables sliding-window masking (causal implied).
+    ``kv_positions``: (B, Skv) absolute positions of cache entries (ring
+    buffers); defaults to arange.
+    """
+    b, sq, h, d = q.shape
+    skv = k.shape[1]
+    hkv = k.shape[2]
+    rep = h // hkv
+    chunk = min(chunk, skv)
+    n_chunks = -(-skv // chunk)
+    pad = n_chunks * chunk - skv
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        if kv_positions is not None:
+            kv_positions = jnp.pad(kv_positions, ((0, 0), (0, pad)),
+                                   constant_values=2**30)
+    if kv_positions is None:
+        kv_positions = jnp.broadcast_to(
+            jnp.arange(n_chunks * chunk, dtype=jnp.int32)[None, :],
+            (b, n_chunks * chunk))
+        if pad:
+            kv_positions = jnp.where(
+                jnp.arange(n_chunks * chunk)[None, :] < skv,
+                kv_positions, 2**30)
+
+    qpos = q_offset + jnp.arange(sq, dtype=jnp.int32)      # (Sq,)
+    scale = 1.0 / jnp.sqrt(jnp.float32(d))
+    qf = (q * scale).astype(q.dtype)
+
+    ks = k.reshape(b, n_chunks, chunk, hkv, d).swapaxes(0, 1)
+    vs = v.reshape(b, n_chunks, chunk, hkv, d).swapaxes(0, 1)
+    ps = kv_positions.reshape(b, n_chunks, chunk).swapaxes(0, 1)
+
+    def body(carry, xs):
+        acc, m, l = carry
+        kc, vc, pc = xs                                      # (B,C,Hkv,D)
+        # scores: (B, H, Sq, C)
+        kc_r = jnp.repeat(kc, rep, axis=2)
+        s_ = jnp.einsum("bqhd,bchd->bhqc", qf, kc_r).astype(jnp.float32)
+        mask = pc[:, None, None, :] <= qpos[None, None, :, None]
+        if window:
+            mask &= pc[:, None, None, :] > (qpos[None, None, :, None] - window)
+        s_ = jnp.where(mask, s_, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s_, axis=-1))
+        p = jnp.exp(s_ - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        vc_r = jnp.repeat(vc, rep, axis=2)
+        pv = jnp.einsum("bhqc,bchd->bhqd", p.astype(vc.dtype), vc_r)
+        acc_new = acc * corr[..., None].astype(acc.dtype) + pv.astype(jnp.float32)
+        return (acc_new, m_new, l_new), None
+
+    acc0 = jnp.zeros((b, h, sq, d), jnp.float32)
+    m0 = jnp.full((b, h, sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, h, sq), jnp.float32)
+    (acc, m, l), _ = jax.lax.scan(body, (acc0, m0, l0), (ks, vs, ps))
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    return out.swapaxes(1, 2).astype(q.dtype)                # (B, Sq, H, D)
+
+
+def self_attention(params, cfg, x, positions=None, *, causal=True,
+                   window: int = 0, mpos=None, chunk: int = 1024):
+    """Full-sequence self attention (train / prefill compute)."""
+    b, s, _ = x.shape
+    if positions is None:
+        positions = jnp.arange(s, dtype=jnp.int32)[None, :]
+    q, k, v = _project_qkv(params, cfg, x, positions, mpos)
+    if not causal:
+        # encoder: no mask — implement via kv_positions all visible
+        kvp = jnp.zeros((b, k.shape[1]), jnp.int32)
+        out = chunked_attention(q, k, v, causal=False, window=0,
+                                q_offset=0, chunk=chunk, kv_positions=kvp)
+    else:
+        out = chunked_attention(q, k, v, causal=True, window=window,
+                                chunk=chunk)
+    return jnp.einsum("bsh,hd->bsd",
+                      out.reshape(b, s, cfg.n_heads * cfg.head_dim),
+                      params["wo"].astype(x.dtype))
+
+
+def prefill_attention(params, cfg, x, *, window: int = 0, mpos=None,
+                      chunk: int = 1024):
+    """Prefill: returns (out, (k_cache, v_cache)). Cache length = S or
+    window (ring-buffered) when window > 0."""
+    b, s, _ = x.shape
+    positions = jnp.arange(s, dtype=jnp.int32)[None, :]
+    q, k, v = _project_qkv(params, cfg, x, positions, mpos)
+    out = chunked_attention(q, k, v, causal=True, window=window, chunk=chunk)
+    out = jnp.einsum("bsh,hd->bsd",
+                     out.reshape(b, s, cfg.n_heads * cfg.head_dim),
+                     params["wo"].astype(x.dtype))
+    if window and s > window:
+        # keep last `window` positions as ring buffer (slot = pos % window)
+        keep_k = k[:, -window:]
+        keep_v = v[:, -window:]
+        pos_tail = positions[:, -window:]
+        slot = pos_tail[0] % window
+        kc = jnp.zeros((b, window) + k.shape[2:], k.dtype).at[:, slot].set(keep_k)
+        vc = jnp.zeros((b, window) + v.shape[2:], v.dtype).at[:, slot].set(keep_v)
+        pc = jnp.full((b, window), -1, jnp.int32).at[:, slot].set(
+            jnp.broadcast_to(pos_tail, (b, window)))
+        return out, (kc, vc, pc)
+    pc = jnp.broadcast_to(positions, (b, s)).astype(jnp.int32)
+    return out, (k, v, pc)
+
+
+def decode_attention(params, cfg, x, cache, pos, *, window: int = 0,
+                     mpos=None):
+    """One-token decode. x: (B, 1, d). cache: (k, v, kvpos) with
+    k/v: (B, S_cache, Hkv, D), kvpos: (B, S_cache) absolute positions
+    (-1 = empty). pos: scalar int32 absolute position of the new token.
+    Ring-buffer write when window > 0."""
+    b = x.shape[0]
+    positions = jnp.full((b, 1), pos, jnp.int32)
+    q, k_new, v_new, = _project_qkv(params, cfg, x, positions, mpos)[:3]
+    k_cache, v_cache, kvpos = cache
+    s_cache = k_cache.shape[1]
+    if window:
+        slot = (pos % s_cache).astype(jnp.int32)
+    else:
+        slot = jnp.asarray(pos, jnp.int32)
+    k_cache = jax.lax.dynamic_update_slice_in_dim(k_cache, k_new, slot, 1)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(v_cache, v_new, slot, 1)
+    kvpos = jax.lax.dynamic_update_slice_in_dim(
+        kvpos, jnp.full((b, 1), pos, jnp.int32), slot, 1)
+    kvpos_masked = jnp.where(kvpos >= 0, kvpos, 2**30)
+    out = chunked_attention(q, k_cache, v_cache, causal=True,
+                            window=window, q_offset=pos,
+                            chunk=min(1024, s_cache),
+                            kv_positions=kvpos_masked)
+    out = jnp.einsum("bsh,hd->bsd",
+                     out.reshape(b, 1, cfg.n_heads * cfg.head_dim),
+                     params["wo"].astype(x.dtype))
+    return out, (k_cache, v_cache, kvpos)
+
+
+# ---------------------------------------------------------------------------
+# cross attention (whisper decoder)
+# ---------------------------------------------------------------------------
+
+def cross_attn_init(key, cfg, dtype=None):
+    return attn_init(key, cfg, dtype)
+
+
+def cross_attention(params, cfg, x, enc_kv):
+    """x: (B, Sq, d); enc_kv: precomputed (k, v) from encoder output."""
+    b, sq, _ = x.shape
+    nh, hd = cfg.n_heads, cfg.head_dim
+    q = jnp.einsum("bsd,dh->bsh", x, params["wq"].astype(x.dtype))
+    q = q.reshape(b, sq, nh, hd)
+    k, v = enc_kv
+    kvp = jnp.zeros((b, k.shape[1]), jnp.int32)
+    out = chunked_attention(q, k, v, causal=False, q_offset=0,
+                            kv_positions=kvp, chunk=min(1024, k.shape[1]))
+    return jnp.einsum("bsh,hd->bsd", out.reshape(b, sq, nh * hd),
+                      params["wo"].astype(x.dtype))
+
+
+def encode_cross_kv(params, cfg, enc_out):
+    """Project encoder output once into decoder cross-attn K/V."""
+    b, s, _ = enc_out.shape
+    nkv, hd = cfg.n_kv_heads, cfg.head_dim
+    k = jnp.einsum("bsd,dh->bsh", enc_out, params["wk"].astype(enc_out.dtype))
+    v = jnp.einsum("bsd,dh->bsh", enc_out, params["wv"].astype(enc_out.dtype))
+    return k.reshape(b, s, nkv, hd), v.reshape(b, s, nkv, hd)

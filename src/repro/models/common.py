@@ -1,0 +1,186 @@
+"""Shared model components: norms, MLPs, rotary embeddings, initializers.
+
+Everything is a pure function over plain-dict parameter pytrees. Scanned
+layer stacks store each leaf with a leading ``n_layers`` axis.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def dense_init(key, shape, dtype, scale: Optional[float] = None):
+    """Truncated-normal fan-in init (matches common LLM inits)."""
+    fan_in = shape[0] if len(shape) > 1 else shape[-1]
+    std = scale if scale is not None else 1.0 / math.sqrt(fan_in)
+    return (jax.random.truncated_normal(key, -3, 3, shape, jnp.float32)
+            * std).astype(dtype)
+
+
+def embed_init(key, shape, dtype):
+    return (jax.random.normal(key, shape, jnp.float32) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def rms_norm(x, weight, eps: float = 1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * weight.astype(jnp.float32)).astype(dt)
+
+
+def layer_norm(x, weight, bias, eps: float = 1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * weight + bias).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def swiglu_init(key, d_model, d_ff, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(k1, (d_model, d_ff), dtype),
+        "w_up": dense_init(k2, (d_model, d_ff), dtype),
+        "w_down": dense_init(k3, (d_ff, d_model), dtype),
+    }
+
+
+def swiglu(params, x):
+    g = jnp.einsum("...d,df->...f", x, params["w_gate"].astype(x.dtype))
+    u = jnp.einsum("...d,df->...f", x, params["w_up"].astype(x.dtype))
+    h = jax.nn.silu(g) * u
+    return jnp.einsum("...f,fd->...d", h, params["w_down"].astype(x.dtype))
+
+
+def gelu_mlp_init(key, d_model, d_ff, dtype):
+    k1, k2 = jax.random.split(key)
+    return {
+        "w_up": dense_init(k1, (d_model, d_ff), dtype),
+        "b_up": jnp.zeros((d_ff,), dtype),
+        "w_down": dense_init(k2, (d_ff, d_model), dtype),
+        "b_down": jnp.zeros((d_model,), dtype),
+    }
+
+
+def gelu_mlp(params, x):
+    h = jnp.einsum("...d,df->...f", x, params["w_up"].astype(x.dtype))
+    h = jax.nn.gelu(h + params["b_up"].astype(x.dtype))
+    return jnp.einsum("...f,fd->...d", h, params["w_down"].astype(x.dtype)) \
+        + params["b_down"].astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# rotary embeddings (standard + M-RoPE)
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., S, H, D); positions: broadcastable to (..., S)."""
+    if theta <= 0:
+        return x
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                      # (d/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, d/2)
+    ang = ang[..., None, :]                           # (..., S, 1, d/2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., ::2], x[..., 1::2]
+    y1 = x1 * cos - x2 * sin
+    y2 = x1 * sin + x2 * cos
+    out = jnp.stack([y1, y2], axis=-1).reshape(x.shape)
+    return out.astype(x.dtype)
+
+
+def apply_m_rope(x, mpos, theta: float, sections=(2, 1, 1)):
+    """Qwen2-VL multimodal rotary: the head dim's frequency bands are split
+    into (temporal, height, width) sections, each rotated by its own
+    position stream.  mpos: (3, ..., S)."""
+    d = x.shape[-1]
+    half = d // 2
+    tot = sum(sections)
+    bounds = []
+    acc = 0
+    for s in sections:
+        n = half * s // tot
+        bounds.append((acc, acc + n))
+        acc += n
+    bounds[-1] = (bounds[-1][0], half)
+    freqs = rope_freqs(d, theta)                      # (half,)
+    # build per-band position: (..., S, half)
+    pos = jnp.zeros(x.shape[:-2] + (half,), jnp.float32)
+    for (lo, hi), p in zip(bounds, mpos):
+        band = jnp.zeros((half,), jnp.float32).at[lo:hi].set(1.0)
+        pos = pos + p[..., None].astype(jnp.float32) * band
+    ang = (pos * freqs)[..., None, :]                 # (..., S, 1, half)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., ::2], x[..., 1::2]
+    y1 = x1 * cos - x2 * sin
+    y2 = x1 * sin + x2 * cos
+    return jnp.stack([y1, y2], axis=-1).reshape(x.shape).astype(x.dtype)
+
+
+def sinusoidal_positions(seq: int, d_model: int):
+    pos = jnp.arange(seq, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(0, d_model, 2, dtype=jnp.float32)[None, :]
+    ang = pos / jnp.power(10000.0, dim / d_model)
+    out = jnp.zeros((seq, d_model), jnp.float32)
+    out = out.at[:, 0::2].set(jnp.sin(ang)).at[:, 1::2].set(jnp.cos(ang))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# loss
+# ---------------------------------------------------------------------------
+
+def chunked_softmax_xent(h, w_out, labels, mask=None, chunk: int = 512):
+    """Next-token cross-entropy computed in sequence chunks so the
+    (B, S, vocab) logits tensor never materializes whole.
+
+    h: (B, S, d); w_out: (d, V); labels: (B, S) int32.
+    Returns mean loss (f32 scalar).
+    """
+    b, s, d = h.shape
+    chunk = min(chunk, s)
+    n = s // chunk
+    rem = s - n * chunk
+    if mask is None:
+        mask = jnp.ones((b, s), jnp.float32)
+
+    def chunk_loss(hc, lc, mc):
+        logits = jnp.einsum("bsd,dv->bsv", hc, w_out.astype(hc.dtype))
+        logits = logits.astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, lc[..., None], axis=-1)[..., 0]
+        return jnp.sum((lse - gold) * mc)
+
+    def body(acc, xs):
+        hc, lc, mc = xs
+        return acc + chunk_loss(hc, lc, mc), None
+
+    hs = h[:, :n * chunk].reshape(b, n, chunk, d).swapaxes(0, 1)
+    ls = labels[:, :n * chunk].reshape(b, n, chunk).swapaxes(0, 1)
+    ms = mask[:, :n * chunk].reshape(b, n, chunk).swapaxes(0, 1)
+    total, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), (hs, ls, ms))
+    if rem:
+        total = total + chunk_loss(h[:, n * chunk:], labels[:, n * chunk:],
+                                   mask[:, n * chunk:])
+    return total / jnp.maximum(jnp.sum(mask), 1.0)

@@ -1,0 +1,395 @@
+"""Serving paths: cache init, prefill, single-token decode for every family.
+
+Cache layout (leaves stacked over layers, scan-compatible):
+  dense/moe/vlm : {"k": (L,B,C,Hkv,D), "v": ..., "pos": (L,B,C) i32, "t": ()}
+                  C = cache_len (== window for ring-buffered long-context)
+  ssm (rwkv6)   : {"ax": (L,B,d), "S": (L,B,nh,hd,hd) f32, "cx": (L,B,d), "t"}
+  hybrid        : {"h": (L,B,nh,hd,N) f32, "tail": (L,B,K-1,chan),
+                   "ak"/"av"/"apos": (n_app,B,C,Hkv,D / C), "t"}
+  audio         : dense cache for decoder self-attn + precomputed cross K/V
+                  {"k","v","pos","ck": (L,B,Senc,Hkv,D),"cv": ..., "t"}
+
+``decode_step`` consumes one token per sequence and returns logits + new
+cache — this is what ``serve_step`` lowers for decode_32k / long_500k.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention, common, rwkv, ssm, transformer
+
+
+def _n_app(cfg):
+    per = cfg.attn_every
+    n_full = cfg.n_layers // per
+    rem = cfg.n_layers - n_full * per
+    return n_full + (1 if rem else 0)
+
+
+def init_cache(cfg, batch: int, cache_len: int, *, window: int = 0,
+               enc_seq: Optional[int] = None) -> dict[str, Any]:
+    """Zeroed cache pytree. ``cache_len`` already equals the ring window
+    for windowed decode."""
+    fam = cfg.family
+    L = cfg.n_layers
+    dt = cfg.adtype
+    t0 = jnp.zeros((), jnp.int32)
+    if fam in ("dense", "moe", "vlm"):
+        kv = (L, batch, cache_len, cfg.n_kv_heads, cfg.head_dim)
+        out = {"k": jnp.zeros(kv, dt), "v": jnp.zeros(kv, dt),
+               "pos": jnp.full((L, batch, cache_len), -1, jnp.int32),
+               "t": t0}
+        if cfg.m_rope:
+            # rope-position offset vs cache position (vision grid compresses
+            # positions; qwen2-vl 'rope_deltas')
+            out["dpos"] = jnp.zeros((), jnp.int32)
+        return out
+    if fam == "ssm":
+        nh, hd = rwkv.rwkv_dims(cfg)
+        return {"ax": jnp.zeros((L, batch, cfg.d_model), dt),
+                "S": jnp.zeros((L, batch, nh, hd, hd), jnp.float32),
+                "cx": jnp.zeros((L, batch, cfg.d_model), dt),
+                "t": t0}
+    if fam == "hybrid":
+        din, nh, hd, n = ssm.mamba2_dims(cfg)
+        chan = din + 2 * n
+        na = _n_app(cfg)
+        kv = (na, batch, cache_len, cfg.n_kv_heads, cfg.head_dim)
+        return {"h": jnp.zeros((L, batch, nh, hd, n), jnp.float32),
+                "tail": jnp.zeros((L, batch, ssm.CONV_K - 1, chan), dt),
+                "ak": jnp.zeros(kv, dt), "av": jnp.zeros(kv, dt),
+                "apos": jnp.full((na, batch, cache_len), -1, jnp.int32),
+                "t": t0}
+    if fam == "audio":
+        es = enc_seq or cfg.enc_seq
+        kv = (L, batch, cache_len, cfg.n_kv_heads, cfg.head_dim)
+        ckv = (L, batch, es, cfg.n_kv_heads, cfg.head_dim)
+        return {"k": jnp.zeros(kv, dt), "v": jnp.zeros(kv, dt),
+                "pos": jnp.full((L, batch, cache_len), -1, jnp.int32),
+                "ck": jnp.zeros(ckv, dt), "cv": jnp.zeros(ckv, dt),
+                "t": t0}
+    raise ValueError(fam)
+
+
+def _pad_kv(ks, vs, ps, extra: int):
+    """Pad stacked (L,B,C,H,D) caches with ``extra`` empty slots."""
+    if extra <= 0:
+        return ks, vs, ps
+    pad4 = ((0, 0), (0, 0), (0, extra), (0, 0), (0, 0))
+    ks = jnp.pad(ks, pad4)
+    vs = jnp.pad(vs, pad4)
+    ps = jnp.pad(ps, ((0, 0), (0, 0), (0, extra)), constant_values=-1)
+    return ks, vs, ps
+
+
+# ---------------------------------------------------------------------------
+# prefill
+# ---------------------------------------------------------------------------
+
+def prefill(params, cfg, tokens, *, extras=None, window: int = 0,
+            attn_chunk: int = 1024, max_new: int = 0):
+    """Processes the prompt, returns (last-position logits (B,V), cache).
+    ``max_new`` reserves cache headroom for subsequent decode steps."""
+    extras = extras or {}
+    fam = cfg.family
+    b, s = tokens.shape
+    x = params["embed"][tokens].astype(cfg.adtype)
+    cache_len = window if (window and s > window) else s
+
+    if fam in ("dense", "moe", "vlm"):
+        mpos = None
+        if fam == "vlm" and "vision_embed" in extras:
+            vis = extras["vision_embed"].astype(cfg.adtype)
+            vis = jnp.einsum("bsd,de->bse", vis,
+                             params["vis_proj"].astype(cfg.adtype))
+            x = jnp.concatenate([vis, x], axis=1)
+            mpos = transformer.build_mrope_positions(cfg, b, vis.shape[1], s)
+            cache_len = (window if (window and x.shape[1] > window)
+                         else x.shape[1])
+
+        def body(x, lp):
+            h = common.rms_norm(x, lp["ln1"])
+            out, kv = attention.prefill_attention(
+                lp["attn"], cfg, h, window=window, mpos=mpos,
+                chunk=attn_chunk)
+            x = x + out
+            h = common.rms_norm(x, lp["ln2"])
+            if cfg.moe is not None:
+                from repro.models import moe as moe_mod
+                h, _ = moe_mod.moe_ffn(lp["moe"], cfg, h)
+            else:
+                h = common.swiglu(lp["mlp"], h)
+            return x + h, kv
+
+        x, (ks, vs, ps) = jax.lax.scan(body, x, params["layers"])
+        if not window:
+            ks, vs, ps = _pad_kv(ks, vs, ps, max_new)
+        cache = {"k": ks, "v": vs, "pos": ps,
+                 "t": jnp.asarray(x.shape[1], jnp.int32)}
+        if cfg.m_rope:
+            if mpos is not None:
+                # next rope position = last text pos + 1; cache pos = t
+                cache["dpos"] = mpos[0, 0, -1] + 1 - x.shape[1]
+            else:
+                cache["dpos"] = jnp.zeros((), jnp.int32)
+        h = common.rms_norm(x, params["final_norm"])
+
+    elif fam == "ssm":
+        def body(x, lp):
+            h = common.rms_norm(x, lp["ln1"])
+            out, (ax, S) = rwkv.time_mix_forward(lp["tmix"], cfg, h,
+                                                 return_state=True)
+            x = x + out
+            h = common.rms_norm(x, lp["ln2"])
+            out, cx = rwkv.channel_mix_forward(lp["cmix"], cfg, h,
+                                               return_state=True)
+            return x + out, (ax, S, cx)
+
+        x, (axs, Ss, cxs) = jax.lax.scan(body, x, params["layers"])
+        cache = {"ax": axs, "S": Ss, "cx": cxs,
+                 "t": jnp.asarray(s, jnp.int32)}
+        h = common.rms_norm(x, params["final_norm"])
+
+    elif fam == "hybrid":
+        x, cache = _hybrid_prefill(params, cfg, x, window=window,
+                                   cache_len=cache_len,
+                                   attn_chunk=attn_chunk, max_new=max_new)
+        h = common.rms_norm(x, params["final_norm"])
+
+    elif fam == "audio":
+        enc = extras["enc_embed"].astype(cfg.adtype)
+        enc = enc + common.sinusoidal_positions(
+            enc.shape[1], cfg.d_model).astype(cfg.adtype)
+        enc = transformer._scan_layers(
+            lambda c, lp: transformer._whisper_enc_block_fwd(lp, cfg, c),
+            params["enc_layers"], enc, remat=False)
+        enc = common.layer_norm(enc, params["enc_norm_w"],
+                                params["enc_norm_b"])
+        x = x + params["dec_pos"][:s].astype(cfg.adtype)
+
+        def body(x, lp):
+            ck, cv = attention.encode_cross_kv(lp["cross_attn"], cfg, enc)
+            h = common.layer_norm(x, lp["ln1_w"], lp["ln1_b"])
+            out, kv = attention.prefill_attention(lp["self_attn"], cfg, h,
+                                                  chunk=attn_chunk)
+            x = x + out
+            h = common.layer_norm(x, lp["ln2_w"], lp["ln2_b"])
+            x = x + attention.cross_attention(lp["cross_attn"], cfg, h,
+                                              (ck, cv))
+            h = common.layer_norm(x, lp["ln3_w"], lp["ln3_b"])
+            return x + common.gelu_mlp(lp["mlp"], h), (kv, ck, cv)
+
+        x, ((ks, vs, ps), cks, cvs) = jax.lax.scan(body, x, params["layers"])
+        if not window:
+            ks, vs, ps = _pad_kv(ks, vs, ps, max_new)
+        cache = {"k": ks, "v": vs, "pos": ps, "ck": cks, "cv": cvs,
+                 "t": jnp.asarray(s, jnp.int32)}
+        h = common.layer_norm(x, params["final_norm"],
+                              params["final_norm_b"])
+    else:
+        raise ValueError(fam)
+
+    logits = transformer.logits_from_hidden(params, cfg, h[:, -1:, :])
+    return logits[:, 0, :], cache
+
+
+def _hybrid_prefill(params, cfg, x, *, window, cache_len, attn_chunk,
+                    max_new: int = 0):
+    per = cfg.attn_every
+    n = cfg.n_layers
+    n_full = n // per
+    rem = n - n_full * per
+
+    def attn_prefill(x):
+        h = common.rms_norm(x, params["shared_attn"]["ln"])
+        out, kv = attention.prefill_attention(
+            params["shared_attn"]["attn"], cfg, h, window=window,
+            chunk=attn_chunk)
+        return x + out, kv
+
+    def mamba_scan(x, sl):
+        def body(c, lp):
+            h = common.rms_norm(c, lp["ln1"])
+            out, st = ssm.mamba2_forward(lp["mamba"], cfg, h,
+                                         return_state=True)
+            return c + out, st
+
+        return jax.lax.scan(body, x, sl)
+
+    layers = params["layers"]
+    full = jax.tree.map(lambda a: a[:n_full * per].reshape(
+        (n_full, per) + a.shape[1:]), layers)
+
+    def outer(x, sl):
+        x, kv = attn_prefill(x)
+        x, states = mamba_scan(x, sl)
+        return x, (kv, states)
+
+    x, (kvs, sts) = jax.lax.scan(outer, x, full)
+    hs, tails = sts
+    hs = hs.reshape((n_full * per,) + hs.shape[2:])
+    tails = tails.reshape((n_full * per,) + tails.shape[2:])
+    aks, avs, aps = kvs
+    if rem:
+        x, kv_r = attn_prefill(x)
+        tail_sl = jax.tree.map(lambda a: a[n_full * per:], layers)
+        x, (h_r, t_r) = mamba_scan(x, tail_sl)
+        hs = jnp.concatenate([hs, h_r], axis=0)
+        tails = jnp.concatenate([tails, t_r], axis=0)
+        aks = jnp.concatenate([aks, kv_r[0][None]], axis=0)
+        avs = jnp.concatenate([avs, kv_r[1][None]], axis=0)
+        aps = jnp.concatenate([aps, kv_r[2][None]], axis=0)
+    if not window:
+        aks, avs, aps = _pad_kv(aks, avs, aps, max_new)
+    cache = {"h": hs, "tail": tails, "ak": aks, "av": avs, "apos": aps,
+             "t": jnp.asarray(x.shape[1], jnp.int32)}
+    return x, cache
+
+
+# ---------------------------------------------------------------------------
+# decode (one token)
+# ---------------------------------------------------------------------------
+
+def decode_step(params, cfg, cache, tokens, *, window: int = 0):
+    """tokens: (B, 1) int32. Returns (logits (B, V), new cache)."""
+    fam = cfg.family
+    b = tokens.shape[0]
+    pos = cache["t"]
+    x = params["embed"][tokens[:, 0]].astype(cfg.adtype)[:, None, :]
+
+    if fam in ("dense", "moe", "vlm"):
+        rpos = pos + cache.get("dpos", 0) if cfg.m_rope else pos
+        mpos = (jnp.broadcast_to(rpos, (3, b, 1)).astype(jnp.int32)
+                if cfg.m_rope else None)
+
+        def body(x, xs):
+            lp, k, v, p = xs
+            h = common.rms_norm(x, lp["ln1"])
+            out, (k, v, p) = attention.decode_attention(
+                lp["attn"], cfg, h, (k, v, p), pos, window=window,
+                mpos=mpos)
+            x = x + out
+            h = common.rms_norm(x, lp["ln2"])
+            if cfg.moe is not None:
+                from repro.models import moe as moe_mod
+                h, _ = moe_mod.moe_ffn(lp["moe"], cfg, h)
+            else:
+                h = common.swiglu(lp["mlp"], h)
+            return x + h, (k, v, p)
+
+        x, (ks, vs, ps) = jax.lax.scan(
+            body, x, (params["layers"], cache["k"], cache["v"],
+                      cache["pos"]))
+        new = {"k": ks, "v": vs, "pos": ps, "t": pos + 1}
+        if cfg.m_rope:
+            new["dpos"] = cache.get("dpos", jnp.zeros((), jnp.int32))
+        h = common.rms_norm(x, params["final_norm"])
+
+    elif fam == "ssm":
+        def body(x, xs):
+            lp, ax, S, cx = xs
+            h = common.rms_norm(x, lp["ln1"])
+            out, (ax, S) = rwkv.time_mix_forward(
+                lp["tmix"], cfg, h, state=(ax, S), return_state=True)
+            x = x + out
+            h = common.rms_norm(x, lp["ln2"])
+            out, cx = rwkv.channel_mix_forward(lp["cmix"], cfg, h,
+                                               state=cx, return_state=True)
+            return x + out, (ax, S, cx)
+
+        x, (axs, Ss, cxs) = jax.lax.scan(
+            body, x, (params["layers"], cache["ax"], cache["S"],
+                      cache["cx"]))
+        new = {"ax": axs, "S": Ss, "cx": cxs, "t": pos + 1}
+        h = common.rms_norm(x, params["final_norm"])
+
+    elif fam == "hybrid":
+        x, new = _hybrid_decode(params, cfg, cache, x, pos, window=window)
+        h = common.rms_norm(x, params["final_norm"])
+
+    elif fam == "audio":
+        x = x + params["dec_pos"][pos][None, None, :].astype(cfg.adtype)
+
+        def body(x, xs):
+            lp, k, v, p, ck, cv = xs
+            h = common.layer_norm(x, lp["ln1_w"], lp["ln1_b"])
+            out, (k, v, p) = attention.decode_attention(
+                lp["self_attn"], cfg, h, (k, v, p), pos, window=window)
+            x = x + out
+            h = common.layer_norm(x, lp["ln2_w"], lp["ln2_b"])
+            x = x + attention.cross_attention(lp["cross_attn"], cfg, h,
+                                              (ck, cv))
+            h = common.layer_norm(x, lp["ln3_w"], lp["ln3_b"])
+            return x + common.gelu_mlp(lp["mlp"], h), (k, v, p)
+
+        x, (ks, vs, ps) = jax.lax.scan(
+            body, x, (params["layers"], cache["k"], cache["v"],
+                      cache["pos"], cache["ck"], cache["cv"]))
+        new = {"k": ks, "v": vs, "pos": ps, "ck": cache["ck"],
+               "cv": cache["cv"], "t": pos + 1}
+        h = common.layer_norm(x, params["final_norm"],
+                              params["final_norm_b"])
+    else:
+        raise ValueError(fam)
+
+    logits = transformer.logits_from_hidden(params, cfg, h)
+    return logits[:, 0, :], new
+
+
+def _hybrid_decode(params, cfg, cache, x, pos, *, window):
+    per = cfg.attn_every
+    n = cfg.n_layers
+    n_full = n // per
+    rem = n - n_full * per
+
+    def attn_step(x, kvp):
+        h = common.rms_norm(x, params["shared_attn"]["ln"])
+        out, kvp = attention.decode_attention(
+            params["shared_attn"]["attn"], cfg, h, kvp, pos, window=window)
+        return x + out, kvp
+
+    def mamba_steps(x, sl_params, sl_h, sl_tail):
+        def body(c, xs):
+            lp, h_l, tail_l = xs
+            hh = common.rms_norm(c, lp["ln1"])
+            out, st = ssm.mamba2_step(lp["mamba"], cfg, hh, (h_l, tail_l))
+            return c + out, st
+
+        return jax.lax.scan(body, x, (sl_params, sl_h, sl_tail))
+
+    layers = params["layers"]
+    grp = lambda a: a[:n_full * per].reshape((n_full, per) + a.shape[1:])
+    full = jax.tree.map(grp, layers)
+    h_full = grp(cache["h"])
+    tail_full = grp(cache["tail"])
+    ak, av, ap = cache["ak"], cache["av"], cache["apos"]
+
+    def outer(x, xs):
+        sl, h_sl, t_sl, k, v, p = xs
+        x, kvp = attn_step(x, (k, v, p))
+        x, (h_new, t_new) = mamba_steps(x, sl, h_sl, t_sl)
+        return x, (h_new, t_new, kvp)
+
+    x, (h_new, t_new, kvps) = jax.lax.scan(
+        outer, x, (full, h_full, tail_full,
+                   ak[:n_full], av[:n_full], ap[:n_full]))
+    h_out = h_new.reshape((n_full * per,) + h_new.shape[2:])
+    t_out = t_new.reshape((n_full * per,) + t_new.shape[2:])
+    ak_out, av_out, ap_out = kvps
+    if rem:
+        x, (k_r, v_r, p_r) = attn_step(x, (ak[n_full], av[n_full],
+                                           ap[n_full]))
+        tail_sl = jax.tree.map(lambda a: a[n_full * per:], layers)
+        x, (h_r, t_r) = mamba_steps(x, tail_sl, cache["h"][n_full * per:],
+                                    cache["tail"][n_full * per:])
+        h_out = jnp.concatenate([h_out, h_r], axis=0)
+        t_out = jnp.concatenate([t_out, t_r], axis=0)
+        ak_out = jnp.concatenate([ak_out, k_r[None]], axis=0)
+        av_out = jnp.concatenate([av_out, v_r[None]], axis=0)
+        ap_out = jnp.concatenate([ap_out, p_r[None]], axis=0)
+    new = {"h": h_out, "tail": t_out, "ak": ak_out, "av": av_out,
+           "apos": ap_out, "t": pos + 1}
+    return x, new

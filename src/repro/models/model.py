@@ -1,0 +1,170 @@
+"""Public model API: ``build_model(cfg)`` -> ``Model`` with init / loss /
+train-forward / prefill / decode, uniform across all 10 assigned families.
+
+Also hosts the paper's own testbed models (§4.1): the 21,840-parameter
+MNIST CNN (2 conv + 2 fc) and the ~454k-parameter CIFAR CNN (3 conv +
+3 fc) used by the faithful Arena reproduction.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import common, decode, transformer
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ArchConfig
+
+    # ---- parameters -------------------------------------------------------
+    def init(self, key):
+        return transformer.init_params(key, self.cfg)
+
+    # ---- training ---------------------------------------------------------
+    def loss(self, params, batch, *, remat: bool = False,
+             ep_axis: Optional[str] = None, ep_size: int = 1,
+             attn_chunk: int = 1024, wkv_chunked: bool = False,
+             act_spec=None):
+        """batch: {"tokens", "labels"[, "enc_embed" | "vision_embed"]}.
+        Returns scalar f32 loss (xent + 0.01 * moe aux)."""
+        cfg = self.cfg
+        extras = {k: batch[k] for k in ("enc_embed", "vision_embed")
+                  if k in batch}
+        h, aux = transformer.forward_hidden(
+            params, cfg, batch["tokens"], extras=extras, remat=remat,
+            ep_axis=ep_axis, ep_size=ep_size, attn_chunk=attn_chunk,
+            wkv_chunked=wkv_chunked, act_spec=act_spec)
+        labels = batch["labels"]
+        if cfg.family == "vlm" and "vision_embed" in batch:
+            h = h[:, -labels.shape[1]:, :]   # loss over text positions only
+        w = (params["embed"].T if cfg.tie_embeddings
+             else params["unembed"])
+        xent = common.chunked_softmax_xent(h, w, labels)
+        return xent + 0.01 * aux
+
+    def logits(self, params, batch, **kw):
+        h, _ = transformer.forward_hidden(
+            params, self.cfg, batch["tokens"],
+            extras={k: batch[k] for k in ("enc_embed", "vision_embed")
+                    if k in batch}, **kw)
+        return transformer.logits_from_hidden(params, self.cfg, h)
+
+    # ---- serving ----------------------------------------------------------
+    def init_cache(self, batch: int, cache_len: int, *, window: int = 0,
+                   enc_seq: Optional[int] = None):
+        return decode.init_cache(self.cfg, batch, cache_len, window=window,
+                                 enc_seq=enc_seq)
+
+    def prefill(self, params, tokens, *, extras=None, window: int = 0,
+                attn_chunk: int = 1024, max_new: int = 0):
+        return decode.prefill(params, self.cfg, tokens, extras=extras,
+                              window=window, attn_chunk=attn_chunk,
+                              max_new=max_new)
+
+    def decode_step(self, params, cache, tokens, *, window: int = 0):
+        return decode.decode_step(params, self.cfg, cache, tokens,
+                                  window=window)
+
+
+def build_model(cfg: ArchConfig) -> Model:
+    return Model(cfg)
+
+
+# ===========================================================================
+# Paper testbed CNNs (Arena §4.1)
+# ===========================================================================
+
+def _conv2d(x, w, b, stride=1):
+    """x: (B,H,W,Cin); w: (kh,kw,Cin,Cout)."""
+    out = jax.lax.conv_general_dilated(
+        x, w, (stride, stride), "VALID",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    return out + b
+
+
+def _maxpool(x, k=2):
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, k, k, 1), (1, k, k, 1), "VALID")
+
+
+def mnist_cnn_init(key):
+    """2 conv + 2 fc, 21,840 parameters exactly (260+5020+16050+510):
+    conv(1->10,5x5), conv(10->20,5x5), fc(320->50), fc(50->10)."""
+    ks = jax.random.split(key, 4)
+    return {
+        "c1_w": common.dense_init(ks[0], (5, 5, 1, 10), jnp.float32,
+                                  scale=0.1),
+        "c1_b": jnp.zeros((10,)),
+        "c2_w": common.dense_init(ks[1], (5, 5, 10, 20), jnp.float32,
+                                  scale=0.1),
+        "c2_b": jnp.zeros((20,)),
+        "f1_w": common.dense_init(ks[2], (320, 50), jnp.float32),
+        "f1_b": jnp.zeros((50,)),
+        "f2_w": common.dense_init(ks[3], (50, 10), jnp.float32),
+        "f2_b": jnp.zeros((10,)),
+    }
+
+
+def mnist_cnn_apply(params, x):
+    """x: (B, 28, 28, 1) -> logits (B, 10)."""
+    x = _maxpool(jax.nn.relu(_conv2d(x, params["c1_w"], params["c1_b"])))
+    x = _maxpool(jax.nn.relu(_conv2d(x, params["c2_w"], params["c2_b"])))
+    x = x.reshape(x.shape[0], -1)
+    x = jax.nn.relu(x @ params["f1_w"] + params["f1_b"])
+    return x @ params["f2_w"] + params["f2_b"]
+
+
+def cifar_cnn_init(key):
+    """3 conv + 3 fc, 456,906 parameters (paper: 453,834 — matched to 0.7%):
+    conv(3->32,5x5), conv(32->64,5x5), conv(64->128,3x3),
+    fc(1152->256), fc(256->128), fc(128->10)."""
+    ks = jax.random.split(key, 6)
+    return {
+        "c1_w": common.dense_init(ks[0], (5, 5, 3, 32), jnp.float32,
+                                  scale=0.1),
+        "c1_b": jnp.zeros((32,)),
+        "c2_w": common.dense_init(ks[1], (5, 5, 32, 64), jnp.float32,
+                                  scale=0.05),
+        "c2_b": jnp.zeros((64,)),
+        "c3_w": common.dense_init(ks[2], (3, 3, 64, 128), jnp.float32,
+                                  scale=0.05),
+        "c3_b": jnp.zeros((128,)),
+        "f1_w": common.dense_init(ks[3], (1152, 256), jnp.float32),
+        "f1_b": jnp.zeros((256,)),
+        "f2_w": common.dense_init(ks[4], (256, 128), jnp.float32),
+        "f2_b": jnp.zeros((128,)),
+        "f3_w": common.dense_init(ks[5], (128, 10), jnp.float32),
+        "f3_b": jnp.zeros((10,)),
+    }
+
+
+def cifar_cnn_apply(params, x):
+    """x: (B, 32, 32, 3) -> logits (B, 10)."""
+    x = _maxpool(jax.nn.relu(_conv2d(x, params["c1_w"], params["c1_b"])))
+    x = _maxpool(jax.nn.relu(_conv2d(x, params["c2_w"], params["c2_b"])))
+    x = jax.nn.relu(_conv2d(x, params["c3_w"], params["c3_b"]))
+    x = x.reshape(x.shape[0], -1)
+    x = jax.nn.relu(x @ params["f1_w"] + params["f1_b"])
+    x = jax.nn.relu(x @ params["f2_w"] + params["f2_b"])
+    return x @ params["f3_w"] + params["f3_b"]
+
+
+def cnn_loss(apply_fn: Callable, params, batch):
+    logits = apply_fn(params, batch["x"])
+    labels = batch["y"]
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.mean(jnp.take_along_axis(logp, labels[:, None], axis=1))
+
+
+def cnn_accuracy(apply_fn: Callable, params, batch):
+    logits = apply_fn(params, batch["x"])
+    return jnp.mean((jnp.argmax(logits, -1) == batch["y"]).astype(jnp.float32))
+
+
+def count_params(params) -> int:
+    return sum(int(p.size) for p in jax.tree.leaves(params))

@@ -1,0 +1,167 @@
+"""Mixture-of-Experts FFN with top-k routing and capacity-based dispatch.
+
+Two parallelism modes (picked per arch config, DESIGN.md §4):
+  * 'tensor' (grok-1): every expert's d_ff is sharded over the tp axis —
+    no all-to-all; dispatch/combine stay replica-local.
+  * 'expert' (olmoe): experts are partitioned over the tp axis; tokens move
+    through an all_to_all pair (dispatch + combine) when running inside
+    shard_map (``ep_axis`` set). Outside shard_map (smoke tests) the same
+    math runs without the collective.
+
+Dispatch uses the scatter-permutation formulation (position-in-expert via
+cumsum over the (T, E) assignment matrix) so no (T, E, C) one-hot tensor is
+ever materialized.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common
+
+
+def moe_init(key, cfg, dtype=None):
+    dtype = dtype or cfg.dtype
+    e = cfg.moe.n_experts
+    d, f = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 4)
+    return {
+        "router": common.dense_init(ks[0], (d, e), jnp.float32, scale=0.02),
+        "w_gate": common.dense_init(ks[1], (e, d, f), dtype),
+        "w_up": common.dense_init(ks[2], (e, d, f), dtype),
+        "w_down": common.dense_init(ks[3], (e, f, d), dtype),
+    }
+
+
+def _route(params, x_flat, n_experts: int, top_k: int):
+    """Returns (gates (T, k) f32, experts (T, k) i32, aux_loss)."""
+    logits = jnp.einsum("td,de->te", x_flat.astype(jnp.float32),
+                        params["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, experts = jax.lax.top_k(probs, top_k)
+    gates = gates / jnp.maximum(jnp.sum(gates, axis=-1, keepdims=True), 1e-9)
+    # Switch-style load-balance auxiliary loss
+    me = jnp.mean(probs, axis=0)
+    ce = jnp.mean(
+        jax.nn.one_hot(experts[:, 0], n_experts, dtype=jnp.float32), axis=0)
+    aux = n_experts * jnp.sum(me * ce)
+    return gates, experts, aux
+
+
+def _dispatch_indices(experts, n_experts: int, capacity: int):
+    """experts: (T, k). Returns (slot (T, k), keep (T, k)) where
+    slot = expert * capacity + position_in_expert, dropped tokens get
+    slot = n_experts * capacity (sentinel row)."""
+    t, k = experts.shape
+    flat = experts.reshape(-1)                                 # (T*k,)
+    onehot = jax.nn.one_hot(flat, n_experts, dtype=jnp.int32)  # (T*k, E)
+    pos = jnp.cumsum(onehot, axis=0) - 1                       # pos in expert
+    pos = jnp.sum(pos * onehot, axis=-1)                       # (T*k,)
+    keep = pos < capacity
+    slot = jnp.where(keep, flat * capacity + pos, n_experts * capacity)
+    return slot.reshape(t, k), keep.reshape(t, k)
+
+
+MOE_TOKEN_CHUNK = 8192
+
+
+def moe_ffn(params, cfg, x, *, ep_axis: Optional[str] = None,
+            ep_size: int = 1, token_chunk: int = MOE_TOKEN_CHUNK):
+    """x: (B, S, d) -> (B, S, d), plus aux loss (f32 scalar).
+
+    Long sequences are processed in ``token_chunk`` chunks (scan): the
+    dispatch/combine buffers scale with the chunk, not the sequence —
+    32k-prefill at 1M global tokens otherwise materializes a
+    (T·top_k, d) buffer in the tens of GB (measured on olmoe).
+    Capacity is per-chunk (standard practice). ``ep_axis``/``ep_size``:
+    axis name/size for expert parallelism ('expert' mode only).
+    """
+    mc = cfg.moe
+    b, s, d = x.shape
+    t_all = b * s
+    if t_all > token_chunk and t_all % token_chunk == 0:
+        n_chunks = t_all // token_chunk
+        xc = x.reshape(n_chunks, token_chunk, 1, d)
+
+        def body(aux, xch):
+            out, a = _moe_tokens(params, cfg, xch, ep_axis=ep_axis,
+                                 ep_size=ep_size)
+            return aux + a, out
+
+        aux, outs = jax.lax.scan(body, jnp.zeros((), jnp.float32), xc)
+        return outs.reshape(b, s, d), aux / n_chunks
+    return _moe_tokens(params, cfg, x, ep_axis=ep_axis, ep_size=ep_size)
+
+
+def _moe_tokens(params, cfg, x, *, ep_axis: Optional[str] = None,
+                ep_size: int = 1):
+    mc = cfg.moe
+    b, s, d = x.shape
+    t = b * s
+    xf = x.reshape(t, d)
+    ep = mc.parallelism == "expert" and ep_axis is not None and ep_size > 1
+    if ep:
+        # activations are replicated over the tp axis between blocks; for
+        # expert parallelism each shard takes its 1/ep_size token slice,
+        # exchanges via all_to_all, and re-replicates at the end.
+        t_local = t // ep_size
+        idx = jax.lax.axis_index(ep_axis)
+        xf = jax.lax.dynamic_slice_in_dim(xf, idx * t_local, t_local)
+        t = t_local
+    gates, experts, aux = _route(params, xf, mc.n_experts, mc.top_k)
+    capacity = int(max(1, (t * mc.top_k * mc.capacity_factor) // mc.n_experts))
+    # pad capacity to an MXU-friendly multiple where it matters
+    if capacity >= 128:
+        capacity = -(-capacity // 128) * 128
+    slot, keep = _dispatch_indices(experts, mc.n_experts, capacity)
+
+    # scatter tokens -> (E * C (+1 sentinel), d)
+    buf = jnp.zeros((mc.n_experts * capacity + 1, d), x.dtype)
+    buf = buf.at[slot.reshape(-1)].set(
+        jnp.repeat(xf, mc.top_k, axis=0), mode="drop")
+    ex_in = buf[:-1].reshape(mc.n_experts, capacity, d)        # (E, C, d)
+
+    if ep:
+        # each shard built buffers for all E experts from its token slice;
+        # exchange so each shard holds its E/ep_size experts' tokens from
+        # all shards.
+        e_local = mc.n_experts // ep_size
+        # (ep_size, e_local, C, d): dim 0 = destination shard
+        ex_in = ex_in.reshape(ep_size, e_local, capacity, d)
+        # dispatch: after a2a, dim 0 = source shard, holding *my* experts'
+        # token buffers contributed by every shard
+        ex_in = jax.lax.all_to_all(ex_in, ep_axis, split_axis=0,
+                                   concat_axis=0)
+        ex_in = ex_in.swapaxes(0, 1).reshape(e_local, ep_size * capacity, d)
+        # local experts' params: inside shard_map these are the local slice
+        w_g, w_u, w_d = (params["w_gate"], params["w_up"], params["w_down"])
+        h = jnp.einsum("ecd,edf->ecf", ex_in, w_g.astype(x.dtype))
+        u = jnp.einsum("ecd,edf->ecf", ex_in, w_u.astype(x.dtype))
+        out = jnp.einsum("ecf,efd->ecd", jax.nn.silu(h) * u,
+                         w_d.astype(x.dtype))
+        # combine: send each source shard its tokens back
+        out = out.reshape(e_local, ep_size, capacity, d).swapaxes(0, 1)
+        out = jax.lax.all_to_all(out, ep_axis, split_axis=0, concat_axis=0)
+        ex_out = out.reshape(mc.n_experts, capacity, d)
+    else:
+        w_g, w_u, w_d = (params["w_gate"], params["w_up"], params["w_down"])
+        h = jnp.einsum("ecd,edf->ecf", ex_in, w_g.astype(x.dtype))
+        u = jnp.einsum("ecd,edf->ecf", ex_in, w_u.astype(x.dtype))
+        ex_out = jnp.einsum("ecf,efd->ecd", jax.nn.silu(h) * u,
+                            w_d.astype(x.dtype))
+
+    # gather back: (T, k, d) then gate-combine
+    flat_out = jnp.concatenate(
+        [ex_out.reshape(mc.n_experts * capacity, d),
+         jnp.zeros((1, d), x.dtype)], axis=0)
+    tok = flat_out[slot.reshape(-1)].reshape(t, mc.top_k, d)
+    gated = jnp.einsum("tk,tkd->td",
+                       (gates * keep.astype(gates.dtype)).astype(x.dtype),
+                       tok)
+    if ep:
+        # re-replicate over the tp axis: gather every shard's token slice
+        gated = jax.lax.all_gather(gated, ep_axis, axis=0, tiled=True)
+        aux = jax.lax.pmean(aux, ep_axis)
+    return gated.reshape(b, s, d), aux

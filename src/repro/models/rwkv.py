@@ -1,0 +1,227 @@
+"""RWKV6 ('Finch') blocks — attention-free, data-dependent decay
+[arXiv:2404.05892].
+
+Time-mix: data-dependent token-shift (ddlerp, low-rank) for the r/k/v/g/w
+streams, per-channel data-dependent decay ``w``, WKV linear recurrence with
+bonus ``u``; per-head group-norm; silu(g) gate. Channel-mix: squared-relu
+FFN with receptance gate. The WKV scan here is the pure-jnp oracle for
+``repro.kernels.wkv6``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common
+
+LORA_R = 32
+STREAMS = ("w", "k", "v", "r", "g")
+
+
+def rwkv_dims(cfg):
+    nh = cfg.n_heads
+    hd = cfg.d_model // nh
+    return nh, hd
+
+
+def time_mix_init(key, cfg, dtype=None):
+    dtype = dtype or cfg.dtype
+    d = cfg.d_model
+    nh, hd = rwkv_dims(cfg)
+    ks = jax.random.split(key, 12)
+    p = {
+        "mu_base": (jax.random.uniform(ks[0], (d,)) * 0.1).astype(jnp.float32),
+        "lora_A": common.dense_init(ks[1], (d, LORA_R * len(STREAMS)),
+                                    jnp.float32, scale=0.01),
+        "lora_B": common.dense_init(ks[2], (len(STREAMS), LORA_R, d),
+                                    jnp.float32, scale=0.01),
+        "decay_w0": jnp.full((d,), -6.0, jnp.float32),
+        "decay_A": common.dense_init(ks[3], (d, 64), jnp.float32, scale=0.01),
+        "decay_B": common.dense_init(ks[4], (64, d), jnp.float32, scale=0.01),
+        "bonus_u": (jax.random.normal(ks[5], (nh, hd)) * 0.1).astype(jnp.float32),
+        "w_r": common.dense_init(ks[6], (d, d), dtype),
+        "w_k": common.dense_init(ks[7], (d, d), dtype),
+        "w_v": common.dense_init(ks[8], (d, d), dtype),
+        "w_g": common.dense_init(ks[9], (d, d), dtype),
+        "w_o": common.dense_init(ks[10], (d, d), dtype),
+        "ln_w": jnp.ones((d,), jnp.float32),
+        "ln_b": jnp.zeros((d,), jnp.float32),
+    }
+    for i, s_ in enumerate(STREAMS):
+        p[f"mu_{s_}"] = (jax.random.uniform(ks[11], (d,),
+                                            minval=0.0, maxval=1.0)
+                         * (i + 1) / len(STREAMS)).astype(jnp.float32)
+    return p
+
+
+def channel_mix_init(key, cfg, dtype=None):
+    dtype = dtype or cfg.dtype
+    d, f = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 5)
+    return {
+        "mu_k": (jax.random.uniform(ks[0], (d,)) * 0.5).astype(jnp.float32),
+        "mu_r": (jax.random.uniform(ks[1], (d,)) * 0.5).astype(jnp.float32),
+        "w_k": common.dense_init(ks[2], (d, f), dtype),
+        "w_v": common.dense_init(ks[3], (f, d), dtype),
+        "w_r": common.dense_init(ks[4], (d, d), dtype),
+    }
+
+
+def _ddlerp(p, x, xx):
+    """Data-dependent lerp for all 5 streams. x, xx: (B,S,d).
+    Returns dict stream -> mixed (B,S,d)."""
+    base = x + xx * p["mu_base"].astype(x.dtype)
+    lo = jnp.tanh(jnp.einsum("bsd,dr->bsr", base.astype(jnp.float32),
+                             p["lora_A"]))
+    lo = lo.reshape(lo.shape[:-1] + (len(STREAMS), LORA_R))
+    out = {}
+    for i, s_ in enumerate(STREAMS):
+        delta = jnp.einsum("bsr,rd->bsd", lo[..., i, :], p["lora_B"][i])
+        m = p[f"mu_{s_}"] + delta
+        out[s_] = x + xx * m.astype(x.dtype)
+    return out
+
+
+def wkv_scan(r, k, v, w, u, state=None):
+    """WKV6 recurrence (pure-jnp oracle).
+
+    r,k,v: (B, S, nh, hd); w: (B, S, nh, hd) decay in (0,1);
+    u: (nh, hd) bonus. state: (B, nh, hd, hd) or None.
+    Returns y (B, S, nh, hd), final state.
+    y_t = r_t · (diag(u) k_t v_t^T + S_{t-1}),  S_t = diag(w_t) S_{t-1} + k_t v_t^T
+    """
+    b, s, nh, hd = r.shape
+    if state is None:
+        state = jnp.zeros((b, nh, hd, hd), jnp.float32)
+
+    def step(S, inp):
+        r_t, k_t, v_t, w_t = inp                   # (B, nh, hd)
+        kv = jnp.einsum("bhk,bhv->bhkv", k_t, v_t)
+        y = jnp.einsum("bhk,bhkv->bhv", r_t, S + u[None, :, :, None] * kv)
+        S = S * w_t[..., None] + kv
+        return S, y
+
+    seq = tuple(a.swapaxes(0, 1).astype(jnp.float32) for a in (r, k, v, w))
+    state, ys = jax.lax.scan(step, state, seq)
+    return ys.swapaxes(0, 1), state
+
+
+def wkv_chunked(r, k, v, w, u, state=None, chunk: int = 64):
+    """Chunked WKV (pure-jnp twin of kernels/wkv6): intra-chunk matmul
+    with the decay exponential inside the contraction, inter-chunk state
+    recurrence. Trades O(S) state HBM round-trips for O(S/chunk) — the
+    §Perf 'memory' lever for rwkv6 (EXPERIMENTS.md)."""
+    b, s, nh, hd = r.shape
+    if state is None:
+        state = jnp.zeros((b, nh, hd, hd), jnp.float32)
+    if s % chunk:
+        pad = chunk - s % chunk
+        zp = lambda a: jnp.pad(a, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        r, k, v = map(zp, (r, k, v))
+        w = jnp.pad(w, ((0, 0), (0, pad), (0, 0), (0, 0)),
+                    constant_values=1.0)
+    sp = r.shape[1]
+    nc = sp // chunk
+    rs, ks, vs, ws = (a.astype(jnp.float32)
+                      .reshape(b, nc, chunk, nh, hd).transpose(0, 1, 3, 2, 4)
+                      for a in (r, k, v, w))                # (B,nc,nh,C,hd)
+    logw = jnp.log(jnp.maximum(ws, 1e-38))
+    logcum = jnp.cumsum(logw, axis=3)                       # inclusive
+    lprev = logcum - logw
+    ti = jnp.arange(chunk)
+    lower = ti[:, None] > ti[None, :]                       # t > u strict
+    diff = lprev[:, :, :, :, None, :] - logcum[:, :, :, None, :, :]
+    dd = jnp.exp(jnp.where(lower[None, None, None, :, :, None], diff,
+                           -1e30))                          # (B,nc,nh,t,u,hd)
+    a = jnp.einsum("bchtk,bchuk,bchtuk->bchtu", rs, ks, dd)
+    bonus = jnp.einsum("bchtk,bchtk->bcht",
+                       rs, ks * u[None, None, :, None, :])
+    a = a + jnp.einsum("bcht,tu->bchtu", bonus,
+                       jnp.eye(chunk, dtype=jnp.float32))
+    y = jnp.einsum("bchtu,bchud->bchtd", a, vs)
+    # inter-chunk carry
+    rd = rs * jnp.exp(lprev)
+    dend = jnp.exp(logcum[:, :, :, -1:, :] - logcum)        # (B,nc,nh,C,hd)
+    inc = jnp.einsum("bchuk,bchud->bchkd", ks * dend, vs)   # per-chunk add
+    cdecay = jnp.exp(logcum[:, :, :, -1, :])                # (B,nc,nh,hd)
+
+    def carry(S, xs):
+        inc_c, dec_c = xs                                   # (B,nh,hd,hd),(B,nh,hd)
+        S_out = S
+        S = S * dec_c[:, :, :, None] + inc_c
+        return S, S_out
+
+    state, S_prev = jax.lax.scan(
+        carry, state, (inc.transpose(1, 0, 2, 3, 4),
+                       cdecay.transpose(1, 0, 2, 3)))
+    S_prev = S_prev.transpose(1, 0, 2, 3, 4)                # (B,nc,nh,hd,hd)
+    y = y + jnp.einsum("bchtk,bchkd->bchtd", rd, S_prev)
+    y = y.transpose(0, 1, 3, 2, 4).reshape(b, sp, nh, hd)
+    return y[:, :s], state
+
+
+def time_mix_forward(p, cfg, x, state=None, return_state: bool = False,
+                     use_chunked: bool = False):
+    """x: (B,S,d). state: (last_x (B,d), S (B,nh,hd,hd)) or None."""
+    b, s, d = x.shape
+    nh, hd = rwkv_dims(cfg)
+    if state is None:
+        last_x = jnp.zeros((b, d), x.dtype)
+        wkv_state = None
+    else:
+        last_x, wkv_state = state
+    shifted = jnp.concatenate([last_x[:, None, :], x[:, :-1, :]], axis=1)
+    xx = shifted - x
+    mix = _ddlerp(p, x, xx)
+    r = jnp.einsum("bsd,de->bse", mix["r"], p["w_r"].astype(x.dtype))
+    k = jnp.einsum("bsd,de->bse", mix["k"], p["w_k"].astype(x.dtype))
+    v = jnp.einsum("bsd,de->bse", mix["v"], p["w_v"].astype(x.dtype))
+    g = jax.nn.silu(jnp.einsum("bsd,de->bse", mix["g"],
+                               p["w_g"].astype(x.dtype)))
+    dec = p["decay_w0"] + jnp.einsum(
+        "bsr,rd->bsd",
+        jnp.tanh(jnp.einsum("bsd,dr->bsr", mix["w"].astype(jnp.float32),
+                            p["decay_A"])), p["decay_B"])
+    w = jnp.exp(-jnp.exp(dec.astype(jnp.float32)))             # (B,S,d)
+    rs = r.reshape(b, s, nh, hd)
+    ks_ = k.reshape(b, s, nh, hd)
+    vs = v.reshape(b, s, nh, hd)
+    ws = w.reshape(b, s, nh, hd)
+    if use_chunked and s > 1:
+        y, wkv_state = wkv_chunked(rs, ks_, vs, ws, p["bonus_u"],
+                                   wkv_state)
+    else:
+        y, wkv_state = wkv_scan(rs, ks_, vs, ws, p["bonus_u"], wkv_state)
+    y = y.reshape(b, s, d)
+    # per-head group norm
+    yh = y.reshape(b, s, nh, hd)
+    mu = jnp.mean(yh, axis=-1, keepdims=True)
+    var = jnp.var(yh, axis=-1, keepdims=True)
+    yh = (yh - mu) * jax.lax.rsqrt(var + 64e-5)
+    y = yh.reshape(b, s, d) * p["ln_w"] + p["ln_b"]
+    y = (y.astype(x.dtype)) * g
+    out = jnp.einsum("bsd,de->bse", y, p["w_o"].astype(x.dtype))
+    if return_state:
+        return out, (x[:, -1, :], wkv_state)
+    return out
+
+
+def channel_mix_forward(p, cfg, x, state=None, return_state: bool = False):
+    b, s, d = x.shape
+    if state is None:
+        last_x = jnp.zeros((b, d), x.dtype)
+    else:
+        last_x = state
+    shifted = jnp.concatenate([last_x[:, None, :], x[:, :-1, :]], axis=1)
+    xx = shifted - x
+    xk = x + xx * p["mu_k"].astype(x.dtype)
+    xr = x + xx * p["mu_r"].astype(x.dtype)
+    kk = jnp.einsum("bsd,df->bsf", xk, p["w_k"].astype(x.dtype))
+    kk = jnp.square(jax.nn.relu(kk))
+    vv = jnp.einsum("bsf,fd->bsd", kk, p["w_v"].astype(x.dtype))
+    rr = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", xr,
+                                   p["w_r"].astype(x.dtype)))
+    out = rr * vv
+    if return_state:
+        return out, x[:, -1, :]
+    return out

@@ -1,0 +1,215 @@
+"""Mamba2 (SSD) block — the zamba2-7b backbone [arXiv:2411.15242 cites
+Mamba2, arXiv:2405.21060].
+
+Scalar-per-head A, shared B/C (ngroups=1), short causal conv on the x/B/C
+stream, silu gate, RMSNorm before out-projection. Sequence processing uses
+``jax.lax.scan`` over time (the pure-jnp oracle for the chunked path);
+decode is the O(1) single-step recurrence on carried state.
+
+Projections are separate weights (w_z/w_x/w_B/w_C/w_dt) rather than one
+fused in-projection so the tensor axis shards the inner dim cleanly
+(DESIGN.md §3 — TPU adaptation beats the fused-GEMM GPU habit here:
+GSPMD would otherwise reshard at every static slice).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common
+
+CONV_K = 4
+
+
+def mamba2_dims(cfg):
+    din = cfg.ssm_expand * cfg.d_model
+    headdim = 64
+    nheads = cfg.ssm_heads or din // headdim
+    return din, nheads, din // nheads, cfg.ssm_state
+
+
+def mamba2_init(key, cfg, dtype=None):
+    dtype = dtype or cfg.dtype
+    d = cfg.d_model
+    din, nh, hd, n = mamba2_dims(cfg)
+    ks = jax.random.split(key, 8)
+    return {
+        "w_z": common.dense_init(ks[0], (d, din), dtype),
+        "w_x": common.dense_init(ks[1], (d, din), dtype),
+        "w_B": common.dense_init(ks[2], (d, n), dtype),
+        "w_C": common.dense_init(ks[3], (d, n), dtype),
+        "w_dt": common.dense_init(ks[4], (d, nh), dtype),
+        "conv_w": common.dense_init(ks[5], (CONV_K, din + 2 * n), dtype,
+                                    scale=0.5),
+        "conv_b": jnp.zeros((din + 2 * n,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, nh)).astype(jnp.float32),
+        "D": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.log(jnp.expm1(
+            jnp.exp(jax.random.uniform(ks[6], (nh,), jnp.float32,
+                                       jnp.log(1e-3), jnp.log(1e-1))))),
+        "norm": jnp.ones((din,), dtype),
+        "w_out": common.dense_init(ks[7], (din, d), dtype),
+    }
+
+
+def _project(params, cfg, x):
+    """x: (B,S,d) -> z (B,S,din), xbc (B,S,din+2n), dt (B,S,nh)."""
+    z = jnp.einsum("bsd,dk->bsk", x, params["w_z"].astype(x.dtype))
+    xs = jnp.einsum("bsd,dk->bsk", x, params["w_x"].astype(x.dtype))
+    B = jnp.einsum("bsd,dn->bsn", x, params["w_B"].astype(x.dtype))
+    C = jnp.einsum("bsd,dn->bsn", x, params["w_C"].astype(x.dtype))
+    dt = jnp.einsum("bsd,dh->bsh", x, params["w_dt"].astype(x.dtype))
+    xbc = jnp.concatenate([xs, B, C], axis=-1)
+    return z, xbc, dt
+
+
+def _causal_conv(xbc, w, b):
+    """xbc: (B, S, C); depthwise causal conv, kernel CONV_K."""
+    pad = jnp.pad(xbc, ((0, 0), (CONV_K - 1, 0), (0, 0)))
+    out = jnp.zeros_like(xbc)
+    for i in range(CONV_K):
+        out = out + pad[:, i:i + xbc.shape[1], :] * w[i]
+    return jax.nn.silu(out + b)
+
+
+def ssd_scan(xs, B, C, dt, decay, h0=None):
+    """Sequential SSD recurrence (oracle).
+
+    xs: (B,S,nh,hd) f32; B/C: (B,S,N); dt/decay: (B,S,nh).
+    Returns (y (B,S,nh,hd), final h (B,nh,hd,N))."""
+    bsz, s, nh, hd = xs.shape
+    n = B.shape[-1]
+    if h0 is None:
+        h0 = jnp.zeros((bsz, nh, hd, n), jnp.float32)
+
+    def step(h, inp):
+        xs_t, b_t, c_t, dt_t, dec_t = inp
+        dbx = jnp.einsum("bh,bn,bhp->bhpn", dt_t, b_t, xs_t)
+        h = h * dec_t[:, :, None, None] + dbx
+        y = jnp.einsum("bhpn,bn->bhp", h, c_t)
+        return h, y
+
+    seq = (xs.swapaxes(0, 1), B.swapaxes(0, 1), C.swapaxes(0, 1),
+           dt.swapaxes(0, 1), decay.swapaxes(0, 1))
+    h_final, ys = jax.lax.scan(step, h0, seq)
+    return ys.swapaxes(0, 1), h_final
+
+
+def ssd_chunked(xs, B, C, dt, decay, h0=None, chunk: int = 128):
+    """Chunked SSD (Mamba2's matmul-heavy form, MXU-friendly): intra-chunk
+    attention-like matmuls + inter-chunk state recurrence. Matches
+    ``ssd_scan`` to f32 tolerance; the default for train/prefill on TPU."""
+    bsz, s, nh, hd = xs.shape
+    n = B.shape[-1]
+    if h0 is None:
+        h0 = jnp.zeros((bsz, nh, hd, n), jnp.float32)
+    nc = -(-s // chunk)
+    pad = nc * chunk - s
+    if pad:
+        zpad = lambda a: jnp.pad(a, ((0, 0), (0, pad)) + ((0, 0),) * (a.ndim - 2))
+        xs, B, C, dt = map(zpad, (xs, B, C, dt))
+        # decay pads with 1 (identity) so the final state isn't destroyed
+        decay = jnp.pad(decay, ((0, 0), (0, pad), (0, 0)),
+                        constant_values=1.0)
+    # log-decay cumulative sums within chunks
+    ld = jnp.log(jnp.maximum(decay, 1e-38)).reshape(bsz, nc, chunk, nh)
+    csum = jnp.cumsum(ld, axis=2)                     # (B,nc,c,nh)
+    total = csum[:, :, -1:, :]                        # (B,nc,1,nh)
+    xs_c = xs.reshape(bsz, nc, chunk, nh, hd)
+    B_c = B.reshape(bsz, nc, chunk, n)
+    C_c = C.reshape(bsz, nc, chunk, n)
+    dt_c = dt.reshape(bsz, nc, chunk, nh)
+
+    # intra-chunk: y_intra[t] = sum_{u<=t} C_t·B_u dt_u decay(u+1..t) x_u
+    # decay(u+1..t) = exp(csum[t]-csum[u])
+    scores = jnp.einsum("bktn,bkun->bktu", C_c, B_c)  # (B,nc,c,c)
+    mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+    # mask the EXPONENT (upper triangle would overflow exp and poison the
+    # gradient through where)
+    diff = csum[:, :, :, None, :] - csum[:, :, None, :, :]   # b k t u h
+    dd = jnp.exp(jnp.where(mask[None, None, :, :, None], diff, -1e30))
+    w_ = scores[..., None] * dd * dt_c[:, :, None, :, :]           # b k t u h
+    y_intra = jnp.einsum("bktuh,bkuhp->bkthp", w_, xs_c)
+
+    # chunk-level state contribution: S_k += sum_u decay(u+1..end) dt_u B_u x_u
+    dend = jnp.exp(total - csum)                      # (B,nc,c,nh)
+    dbx = jnp.einsum("bkuh,bkun,bkuhp->bkhpn",
+                     dt_c * dend, B_c, xs_c)          # per-chunk increment
+    chunk_decay = jnp.exp(total[:, :, 0, :])          # (B,nc,nh)
+
+    def carry_fn(h, inp):
+        inc, cd = inp                                  # (B,nh,hd,N),(B,nh)
+        h_out = h                                      # state BEFORE chunk
+        h = h * cd[:, :, None, None] + inc
+        return h, h_out
+
+    hs, h_prev = jax.lax.scan(
+        carry_fn, h0, (dbx.swapaxes(0, 1), chunk_decay.swapaxes(0, 1)))
+    h_prev = h_prev.swapaxes(0, 1)                    # (B,nc,nh,hd,N)
+
+    # inter-chunk: y_inter[t] = C_t · decay(0..t) @ h_prev
+    din_decay = jnp.exp(csum)                          # decay(1..t)? see note
+    y_inter = jnp.einsum("bktn,bkhpn,bkth->bkthp",
+                         C_c, h_prev, din_decay)
+    y = (y_intra + y_inter).reshape(bsz, nc * chunk, nh, hd)
+    return y[:, :s], hs
+
+
+def mamba2_forward(params, cfg, x, return_state: bool = False,
+                   use_chunked: bool = True, chunk: int = 128):
+    """x: (B, S, d) -> (B, S, d)[, final (state, conv_tail)]."""
+    bsz, s, d = x.shape
+    din, nh, hd, n = mamba2_dims(cfg)
+    z, xbc, dt = _project(params, cfg, x)
+    conv_in = xbc
+    xbc = _causal_conv(xbc, params["conv_w"].astype(x.dtype),
+                       params["conv_b"].astype(x.dtype))
+    xs = xbc[..., :din].reshape(bsz, s, nh, hd).astype(jnp.float32)
+    B = xbc[..., din:din + n].astype(jnp.float32)
+    C = xbc[..., din + n:].astype(jnp.float32)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
+    A = -jnp.exp(params["A_log"])
+    decay = jnp.exp(dt * A)
+    if use_chunked and s > 1:
+        y, h_final = ssd_chunked(xs, B, C, dt, decay,
+                                 chunk=min(chunk, s))
+    else:
+        y, h_final = ssd_scan(xs, B, C, dt, decay)
+    y = y + params["D"][None, None, :, None] * xs
+    y = y.reshape(bsz, s, din).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    y = common.rms_norm(y, params["norm"])
+    out = jnp.einsum("bsk,kd->bsd", y, params["w_out"].astype(x.dtype))
+    if return_state:
+        conv_tail = conv_in[:, -(CONV_K - 1):, :]
+        return out, (h_final, conv_tail)
+    return out
+
+
+def mamba2_step(params, cfg, x, state):
+    """One-token decode. x: (B, 1, d); state: (h (B,nh,hd,N) f32,
+    conv_tail (B, CONV_K-1, din+2n))."""
+    bsz = x.shape[0]
+    din, nh, hd, n = mamba2_dims(cfg)
+    h, conv_tail = state
+    z, xbc, dt = _project(params, cfg, x)
+    window = jnp.concatenate([conv_tail, xbc], axis=1)          # (B,K,chan)
+    w = params["conv_w"].astype(x.dtype)
+    conv = jnp.einsum("bkc,kc->bc", window, w) + params["conv_b"].astype(x.dtype)
+    xbc1 = jax.nn.silu(conv)[:, None, :]                        # (B,1,chan)
+    xs = xbc1[..., :din].reshape(bsz, nh, hd).astype(jnp.float32)
+    B = xbc1[..., din:din + n][:, 0].astype(jnp.float32)        # (B,N)
+    C = xbc1[..., din + n:][:, 0].astype(jnp.float32)
+    dtv = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + params["dt_bias"])
+    A = -jnp.exp(params["A_log"])
+    dec = jnp.exp(dtv * A)                                      # (B,nh)
+    dbx = jnp.einsum("bh,bn,bhp->bhpn", dtv, B, xs)
+    h = h * dec[:, :, None, None] + dbx
+    y = jnp.einsum("bhpn,bn->bhp", h, C)
+    y = y + params["D"][None, :, None] * xs
+    y = y.reshape(bsz, 1, din).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    y = common.rms_norm(y, params["norm"])
+    out = jnp.einsum("bsk,kd->bsd", y, params["w_out"].astype(x.dtype))
+    new_tail = jnp.concatenate([conv_tail[:, 1:], xbc], axis=1)
+    return out, (h, new_tail)

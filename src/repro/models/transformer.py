@@ -1,0 +1,339 @@
+"""Layer stacks for all assigned families.
+
+All stacks scan over layers with stacked parameter leaves (leading
+``n_layers`` axis) so HLO size / compile time are depth-independent
+(DESIGN.md §4). Training scans use ``jax.checkpoint`` on the block body
+(full remat — the activation-memory policy the roofline accounts for).
+
+Families:
+  dense / moe / vlm : pre-RMSNorm GQA decoder (+ SwiGLU or MoE FFN)
+  ssm (rwkv6)       : time-mix + channel-mix blocks
+  hybrid (zamba2)   : scanned Mamba2 blocks + one *shared* attention block
+                      applied every ``attn_every`` layers
+  audio (whisper)   : LayerNorm/GELU enc-dec with cross attention
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention, common, moe, rwkv, ssm
+
+
+# ---------------------------------------------------------------------------
+# per-family block init
+# ---------------------------------------------------------------------------
+
+def _dense_block_init(key, cfg):
+    k1, k2 = jax.random.split(key)
+    p = {
+        "ln1": jnp.ones((cfg.d_model,), cfg.dtype),
+        "attn": attention.attn_init(k1, cfg),
+        "ln2": jnp.ones((cfg.d_model,), cfg.dtype),
+    }
+    if cfg.moe is not None:
+        p["moe"] = moe.moe_init(k2, cfg)
+    else:
+        p["mlp"] = common.swiglu_init(k2, cfg.d_model, cfg.d_ff, cfg.dtype)
+    return p
+
+
+def _rwkv_block_init(key, cfg):
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln1": jnp.ones((cfg.d_model,), cfg.dtype),
+        "tmix": rwkv.time_mix_init(k1, cfg),
+        "ln2": jnp.ones((cfg.d_model,), cfg.dtype),
+        "cmix": rwkv.channel_mix_init(k2, cfg),
+    }
+
+
+def _mamba_block_init(key, cfg):
+    return {
+        "ln1": jnp.ones((cfg.d_model,), cfg.dtype),
+        "mamba": ssm.mamba2_init(key, cfg),
+    }
+
+
+def _whisper_enc_block_init(key, cfg):
+    k1, k2 = jax.random.split(key)
+    d = cfg.d_model
+    return {
+        "ln1_w": jnp.ones((d,), cfg.dtype), "ln1_b": jnp.zeros((d,), cfg.dtype),
+        "attn": attention.attn_init(k1, cfg),
+        "ln2_w": jnp.ones((d,), cfg.dtype), "ln2_b": jnp.zeros((d,), cfg.dtype),
+        "mlp": common.gelu_mlp_init(k2, d, cfg.d_ff, cfg.dtype),
+    }
+
+
+def _whisper_dec_block_init(key, cfg):
+    k1, k2, k3 = jax.random.split(key, 3)
+    d = cfg.d_model
+    return {
+        "ln1_w": jnp.ones((d,), cfg.dtype), "ln1_b": jnp.zeros((d,), cfg.dtype),
+        "self_attn": attention.attn_init(k1, cfg),
+        "ln2_w": jnp.ones((d,), cfg.dtype), "ln2_b": jnp.zeros((d,), cfg.dtype),
+        "cross_attn": attention.cross_attn_init(k2, cfg),
+        "ln3_w": jnp.ones((d,), cfg.dtype), "ln3_b": jnp.zeros((d,), cfg.dtype),
+        "mlp": common.gelu_mlp_init(k3, d, cfg.d_ff, cfg.dtype),
+    }
+
+
+def _stacked(init_fn, key, n, cfg):
+    keys = jax.random.split(key, n)
+    return jax.vmap(lambda k: init_fn(k, cfg))(keys)
+
+
+def init_params(key, cfg):
+    """Full model parameter pytree for any family."""
+    keys = jax.random.split(key, 8)
+    d, v = cfg.d_model, cfg.vocab
+    params: dict[str, Any] = {
+        "embed": common.embed_init(keys[0], (v, d), cfg.dtype),
+        "final_norm": jnp.ones((d,), cfg.dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["unembed"] = common.dense_init(keys[1], (d, v), cfg.dtype,
+                                              scale=0.02)
+    fam = cfg.family
+    if fam in ("dense", "moe", "vlm"):
+        params["layers"] = _stacked(_dense_block_init, keys[2],
+                                    cfg.n_layers, cfg)
+        if fam == "vlm":
+            params["vis_proj"] = common.dense_init(keys[3], (d, d), cfg.dtype)
+    elif fam == "ssm":
+        params["layers"] = _stacked(_rwkv_block_init, keys[2],
+                                    cfg.n_layers, cfg)
+    elif fam == "hybrid":
+        params["layers"] = _stacked(_mamba_block_init, keys[2],
+                                    cfg.n_layers, cfg)
+        params["shared_attn"] = {
+            "ln": jnp.ones((d,), cfg.dtype),
+            "attn": attention.attn_init(keys[3], cfg),
+        }
+    elif fam == "audio":
+        params["enc_layers"] = _stacked(_whisper_enc_block_init, keys[2],
+                                        cfg.enc_layers, cfg)
+        params["enc_norm_w"] = jnp.ones((d,), cfg.dtype)
+        params["enc_norm_b"] = jnp.zeros((d,), cfg.dtype)
+        params["layers"] = _stacked(_whisper_dec_block_init, keys[3],
+                                    cfg.n_layers, cfg)
+        params["final_norm_b"] = jnp.zeros((d,), cfg.dtype)
+        params["dec_pos"] = common.embed_init(keys[4], (cfg.dec_ctx, d),
+                                              cfg.dtype)
+    else:
+        raise ValueError(fam)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# block forward (full sequence)
+# ---------------------------------------------------------------------------
+
+def _dense_block_fwd(bp, cfg, x, *, window=0, mpos=None, ep_axis=None,
+                     ep_size=1, chunk=1024):
+    h = common.rms_norm(x, bp["ln1"])
+    h = attention.self_attention(bp["attn"], cfg, h, window=window,
+                                 mpos=mpos, chunk=chunk)
+    x = x + h
+    h = common.rms_norm(x, bp["ln2"])
+    if cfg.moe is not None:
+        h, aux = moe.moe_ffn(bp["moe"], cfg, h, ep_axis=ep_axis,
+                             ep_size=ep_size)
+    else:
+        h = common.swiglu(bp["mlp"], h)
+        aux = jnp.zeros((), jnp.float32)
+    return x + h, aux
+
+
+def _rwkv_block_fwd(bp, cfg, x, wkv_chunked: bool = False):
+    h = common.rms_norm(x, bp["ln1"])
+    x = x + rwkv.time_mix_forward(bp["tmix"], cfg, h,
+                                  use_chunked=wkv_chunked)
+    h = common.rms_norm(x, bp["ln2"])
+    x = x + rwkv.channel_mix_forward(bp["cmix"], cfg, h)
+    return x
+
+
+def _mamba_block_fwd(bp, cfg, x):
+    h = common.rms_norm(x, bp["ln1"])
+    return x + ssm.mamba2_forward(bp["mamba"], cfg, h)
+
+
+def _shared_attn_fwd(sp, cfg, x, *, window=0, chunk=1024):
+    h = common.rms_norm(x, sp["ln"])
+    h = attention.self_attention(sp["attn"], cfg, h, window=window,
+                                 chunk=chunk)
+    return x + h
+
+
+def _whisper_enc_block_fwd(bp, cfg, x):
+    h = common.layer_norm(x, bp["ln1_w"], bp["ln1_b"])
+    h = attention.self_attention(bp["attn"], cfg, h, causal=False,
+                                 chunk=min(1024, x.shape[1]))
+    x = x + h
+    h = common.layer_norm(x, bp["ln2_w"], bp["ln2_b"])
+    return x + common.gelu_mlp(bp["mlp"], h)
+
+
+def _whisper_dec_block_fwd(bp, cfg, x, enc_kv):
+    h = common.layer_norm(x, bp["ln1_w"], bp["ln1_b"])
+    h = attention.self_attention(bp["self_attn"], cfg, h,
+                                 chunk=min(1024, x.shape[1]))
+    x = x + h
+    h = common.layer_norm(x, bp["ln2_w"], bp["ln2_b"])
+    x = x + attention.cross_attention(bp["cross_attn"], cfg, h, enc_kv)
+    h = common.layer_norm(x, bp["ln3_w"], bp["ln3_b"])
+    return x + common.gelu_mlp(bp["mlp"], h)
+
+
+# ---------------------------------------------------------------------------
+# stack forward
+# ---------------------------------------------------------------------------
+
+def _scan_layers(body, layers, x, *, remat: bool):
+    if remat:
+        body = jax.checkpoint(body)
+
+    def f(carry, lp):
+        return body(carry, lp), None
+
+    out, _ = jax.lax.scan(f, x, layers)
+    return out
+
+
+def forward_hidden(params, cfg, tokens, *, extras=None, remat=False,
+                   window=0, ep_axis=None, ep_size=1, attn_chunk=1024,
+                   wkv_chunked=False, act_spec=None):
+    """Embeds ``tokens`` and runs the stack. Returns (hidden (B,S,d),
+    aux_loss). ``extras``: family-specific inputs (enc_embed for audio,
+    vision_embed for vlm)."""
+    extras = extras or {}
+    x = params["embed"][tokens].astype(cfg.adtype)
+    aux_total = jnp.zeros((), jnp.float32)
+    fam = cfg.family
+
+    if fam == "vlm" and "vision_embed" in extras:
+        vis = extras["vision_embed"].astype(cfg.adtype)
+        vis = jnp.einsum("bsd,de->bse", vis,
+                         params["vis_proj"].astype(cfg.adtype))
+        x = jnp.concatenate([vis, x], axis=1)
+        mpos = build_mrope_positions(cfg, x.shape[0],
+                                     vis.shape[1], tokens.shape[1])
+    else:
+        mpos = None
+
+    def _constrain(x):
+        if act_spec is not None:
+            return jax.lax.with_sharding_constraint(x, act_spec)
+        return x
+
+    if fam in ("dense", "moe", "vlm"):
+        def body(carry, lp):
+            x, aux = carry
+            x, a = _dense_block_fwd(lp, cfg, x, window=window, mpos=mpos,
+                                    ep_axis=ep_axis, ep_size=ep_size,
+                                    chunk=attn_chunk)
+            return (_constrain(x), aux + a)
+
+        bodyr = jax.checkpoint(body) if remat else body
+
+        def f(carry, lp):
+            return bodyr(carry, lp), None
+
+        (x, aux_total), _ = jax.lax.scan(f, (x, aux_total), params["layers"])
+
+    elif fam == "ssm":
+        x = _scan_layers(
+            lambda c, lp: _constrain(_rwkv_block_fwd(
+                lp, cfg, c, wkv_chunked=wkv_chunked)),
+            params["layers"], x, remat=remat)
+
+    elif fam == "hybrid":
+        x = _hybrid_forward(params, cfg, x, remat=remat, window=window,
+                            attn_chunk=attn_chunk, constrain=_constrain)
+
+    elif fam == "audio":
+        enc = extras["enc_embed"].astype(cfg.adtype)
+        enc = enc + common.sinusoidal_positions(
+            enc.shape[1], cfg.d_model).astype(cfg.adtype)
+        enc = _scan_layers(
+            lambda c, lp: _whisper_enc_block_fwd(lp, cfg, c),
+            params["enc_layers"], enc, remat=remat)
+        enc = common.layer_norm(enc, params["enc_norm_w"],
+                                params["enc_norm_b"])
+        s = tokens.shape[1]
+        x = x + params["dec_pos"][:s].astype(cfg.adtype)
+
+        def dec_body(c, lp):
+            enc_kv = attention.encode_cross_kv(lp["cross_attn"], cfg, enc)
+            return _whisper_dec_block_fwd(lp, cfg, c, enc_kv)
+
+        x = _scan_layers(dec_body, params["layers"], x, remat=remat)
+        x = common.layer_norm(x, params["final_norm"],
+                              params["final_norm_b"])
+        return x, aux_total
+    else:
+        raise ValueError(fam)
+
+    x = common.rms_norm(x, params["final_norm"])
+    return x, aux_total
+
+
+def _hybrid_forward(params, cfg, x, *, remat, window, attn_chunk,
+                    constrain=lambda v: v):
+    """zamba2: scanned mamba blocks; shared attention block every
+    ``attn_every`` layers (applied before each group)."""
+    per = cfg.attn_every
+    n = cfg.n_layers
+    n_full = n // per
+    raw = lambda c, lp: constrain(_mamba_block_fwd(lp, cfg, c))
+    body = jax.checkpoint(raw) if remat else raw
+
+    def group(x, sl):
+        x = _shared_attn_fwd(params["shared_attn"], cfg, x, window=window,
+                             chunk=attn_chunk)
+
+        def f(c, lp):
+            return body(c, lp), None
+
+        x, _ = jax.lax.scan(f, x, sl)
+        return x
+
+    layers = params["layers"]
+    full = jax.tree.map(lambda a: a[:n_full * per].reshape(
+        (n_full, per) + a.shape[1:]), layers)
+
+    def outer(c, sl):
+        return group(c, sl), None
+
+    x, _ = jax.lax.scan(outer, x, full)
+    rem = n - n_full * per
+    if rem:
+        tail = jax.tree.map(lambda a: a[n_full * per:], layers)
+        x = group(x, tail)
+    return x
+
+
+def build_mrope_positions(cfg, batch, n_vis, n_text):
+    """Qwen2-VL M-RoPE position streams (3, B, S): vision tokens get a
+    (t=0, h, w) grid; text tokens advance all three streams together."""
+    g = int(n_vis ** 0.5) or 1
+    hh = jnp.arange(n_vis, dtype=jnp.int32) // g
+    ww = jnp.arange(n_vis, dtype=jnp.int32) % g
+    tt = jnp.zeros((n_vis,), jnp.int32)
+    start = jnp.int32(g)
+    text = start + jnp.arange(n_text, dtype=jnp.int32)
+    pt = jnp.concatenate([tt, text])
+    ph = jnp.concatenate([hh, text])
+    pw = jnp.concatenate([ww, text])
+    pos = jnp.stack([pt, ph, pw])                        # (3, S)
+    return jnp.broadcast_to(pos[:, None, :], (3, batch, n_vis + n_text))
+
+
+def logits_from_hidden(params, cfg, h):
+    w = params["embed"].T if cfg.tie_embeddings else params["unembed"]
+    return jnp.einsum("bsd,dv->bsv", h, w.astype(h.dtype))

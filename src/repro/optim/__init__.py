@@ -1,0 +1,1 @@
+from repro.optim.optimizers import adam, sgd, sgd_momentum  # noqa: F401

@@ -1,0 +1,328 @@
+"""The HFL environment the DRL agent interacts with (paper Fig. 5 + Alg. 1).
+
+Two fidelity modes sharing one interface:
+
+* ``mode="real"`` — devices actually train the testbed CNN on federated
+  synthetic MNIST/CIFAR shards via ``repro.core.hfl`` (vmapped); accuracy
+  is measured on the held-out test set. This is the faithful reproduction
+  path (used by the paper-table benchmarks at reduced scale — 1 CPU core
+  vs. the paper's 50 Raspberry Pis).
+* ``mode="analytic"`` — accuracy evolves by a saturating-progress model
+  with non-IID drift and staleness penalties calibrated to the real mode;
+  time/energy come from the same hardware simulator. Used to train the
+  PPO agent for the paper's full episode counts (1500/700) at tractable
+  cost; EXPERIMENTS.md reports both modes.
+
+One env step = one cloud aggregation round driven by the per-edge action
+(γ1, γ2) — exactly Algorithm 1's inner loop.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import hfl, pca, profiling, reward as reward_mod, state as state_mod
+from repro.data import federated, synthetic
+from repro.models import model as model_mod
+from repro.sim import hardware
+
+
+@dataclasses.dataclass
+class EnvConfig:
+    task: str = "mnist"              # mnist | cifar
+    mode: str = "real"               # real | analytic
+    n_devices: int = 50
+    n_edges: int = 5
+    n_local: int = 1200              # samples per device (paper: 1200/1000)
+    batch_size: int = 32
+    lr: float = 0.003                # paper: 0.003 MNIST, 0.01 Cifar
+    data_scheme: str = "label2"      # iid | labelK | dirichlet
+    dirichlet_alpha: float = 0.5
+    threshold_time: float = 3000.0   # T (paper: 3000 s MNIST, 12000 s Cifar)
+    epsilon: float = 0.002           # reward energy weight
+    gamma_max: int = 8               # action upper bound per frequency
+    n_pca: int = 6
+    edge_regions: Optional[tuple] = None   # default 3x cn + 2x us (paper)
+    use_profiling: bool = True       # cluster devices by capability
+    seed: int = 0
+    # device mobility (paper §2.3): per-round probability that a device
+    # changes its interference profile (app started/stopped, moved) and
+    # re-cluster cadence (profiling module's periodic re-cluster, §3.1)
+    churn_prob: float = 0.0
+    recluster_every: int = 0
+    # analytic-mode calibration
+    a_max: float = 0.80
+    a_rate: float = 0.016            # per-local-epoch progress rate
+    drift_coef: float = 0.25         # non-IID drift per unbalanced epoch
+    stale_coef: float = 0.015        # large-γ2 staleness penalty
+    noise: float = 0.004
+
+    def fixup(self) -> "EnvConfig":
+        if self.task == "cifar" and self.threshold_time == 3000.0:
+            # paper: T=12000 s, lr=0.01, eps=0.03. Our simulator's E(k) is
+            # the 50-device TOTAL (~10x the paper's testbed scale), so the
+            # reward weight is rescaled to keep the paper's accuracy-vs-
+            # energy pressure ratio (see EXPERIMENTS.md scale note).
+            return dataclasses.replace(self, threshold_time=12000.0,
+                                       lr=0.01, epsilon=0.004,
+                                       n_local=1000)
+        return self
+
+
+class HFLEnv:
+    """Gym-ish: reset() -> state; step(a) -> (state, reward, done, info)."""
+
+    def __init__(self, cfg: EnvConfig):
+        cfg = cfg.fixup()
+        self.cfg = cfg
+        self.rng = np.random.default_rng(cfg.seed)
+        self.profiles = hardware.DeviceProfiles.sample(
+            self.rng, cfg.n_devices, task=cfg.task)
+        regions = cfg.edge_regions or tuple(
+            ["cn"] * (cfg.n_edges - cfg.n_edges // 2)
+            + ["us"] * (cfg.n_edges // 2))
+        self.comm = hardware.CommModel(list(regions), task=cfg.task)
+        # ---- topology: profiling module or round-robin -------------------
+        if cfg.use_profiling:
+            self.edge_assign = profiling.cluster_devices(
+                self.profiles, cfg.n_edges, seed=cfg.seed)
+        else:
+            self.edge_assign = np.arange(cfg.n_devices) % cfg.n_edges
+        self._edge_assign_j = jnp.asarray(self.edge_assign)
+        # ---- task / data --------------------------------------------------
+        if cfg.mode == "real":
+            if cfg.task == "mnist":
+                train, test = synthetic.synth_mnist(
+                    n_train=max(20000, cfg.n_devices * cfg.n_local),
+                    n_test=2000, seed=cfg.seed)
+                self._init_fn = model_mod.mnist_cnn_init
+                self._apply_fn = model_mod.mnist_cnn_apply
+            else:
+                train, test = synthetic.synth_cifar(
+                    n_train=max(20000, cfg.n_devices * cfg.n_local),
+                    n_test=2000, seed=cfg.seed)
+                self._init_fn = model_mod.cifar_cnn_init
+                self._apply_fn = model_mod.cifar_cnn_apply
+            self.fed = federated.make_federated(
+                train, test, cfg.n_devices, cfg.n_local,
+                scheme=cfg.data_scheme, seed=cfg.seed,
+                alpha=cfg.dirichlet_alpha)
+            loss_fn = lambda p, b: model_mod.cnn_loss(self._apply_fn, p, b)
+            self._cloud_round = jax.jit(
+                hfl.make_cloud_round(loss_fn, cfg.lr, cfg.batch_size,
+                                     cfg.n_edges, cfg.gamma_max,
+                                     cfg.gamma_max))
+            self._acc_fn = jax.jit(
+                lambda p, x, y: model_mod.cnn_accuracy(
+                    self._apply_fn, p, {"x": x, "y": y}))
+        else:
+            # analytic mode still needs a (tiny) parameter vector so the
+            # PCA state path exercises the real machinery
+            self._init_fn = model_mod.mnist_cnn_init
+            self.fed = None
+        self.model_dim_mb = hardware.MODEL_MB[cfg.task]
+        # per-edge non-IID severity proxy for analytic drift (label overlap)
+        self._edge_sizes = np.array(
+            [np.sum(self.edge_assign == j) * cfg.n_local
+             for j in range(cfg.n_edges)], np.float32)
+        self.episode = 0
+        self._key = jax.random.PRNGKey(cfg.seed)
+
+    # ------------------------------------------------------------------
+    def _next_key(self):
+        self._key, sub = jax.random.split(self._key)
+        return sub
+
+    def reset(self) -> np.ndarray:
+        cfg = self.cfg
+        self.k = 0
+        self.t_re = cfg.threshold_time
+        self.acc = 0.1
+        self.total_energy = 0.0
+        self.energy_hist = []
+        self.acc_hist = []
+        self.time_hist = []
+        self.episode += 1
+        key = jax.random.PRNGKey(cfg.seed + 1000)  # same w(0) each episode
+        if cfg.mode == "real":
+            self.bank = hfl.init_bank(self._init_fn, key, cfg.n_devices)
+            self.global_model = hfl.bank_select(self.bank, 0)
+            self.edge_models = jax.tree.map(
+                lambda a: jnp.stack([a] * cfg.n_edges),
+                self.global_model)
+        else:
+            p0 = self._init_fn(key)
+            self.global_model = p0
+            self.edge_models = jax.tree.map(
+                lambda a: jnp.stack([a] * cfg.n_edges), p0)
+            self._edge_acc = np.full(cfg.n_edges, 0.1, np.float32)
+        # Algorithm 1 line 3-5: one fixed-frequency round, fit PCA
+        g0 = np.full(cfg.n_edges, 2, np.int64)
+        h_edges, t_use, e_tot = self._run_round(g0, g0)
+        self._fit_pca()
+        self.t_re -= t_use
+        self.k = 1
+        self._h_edges = h_edges
+        return self._state()
+
+    def _fit_pca(self):
+        flat = [pca.flatten_model(self.global_model)]
+        for j in range(self.cfg.n_edges):
+            flat.append(pca.flatten_model(
+                jax.tree.map(lambda a: a[j], self.edge_models)))
+        self.pca_state = pca.fit(jnp.stack(flat), self.cfg.n_pca)
+
+    # ------------------------------------------------------------------
+    def _run_round(self, g1: np.ndarray, g2: np.ndarray,
+                   participate: Optional[np.ndarray] = None):
+        """Executes one cloud round; returns (h_edges (M,3), t_use, E)."""
+        cfg = self.cfg
+        m = cfg.n_edges
+        # --- device mobility ------------------------------------------------
+        if cfg.churn_prob > 0:
+            moved = self.rng.random(cfg.n_devices) < cfg.churn_prob
+            if moved.any():
+                self.profiles.cpu_usage[moved] = self.rng.choice(
+                    [0.1, 0.2, 0.3, 0.4, 0.5], size=int(moved.sum()))
+            if (cfg.recluster_every and cfg.use_profiling
+                    and self.k % cfg.recluster_every == 0 and self.k > 0):
+                self.set_topology(profiling.cluster_devices(
+                    self.profiles, cfg.n_edges, seed=cfg.seed + self.k))
+        # --- hardware costs ------------------------------------------------
+        et = self.profiles.epoch_time(self.rng)          # (N,)
+        ee = self.profiles.epoch_energy(self.rng)        # (N,)
+        ec = self.comm.ec_time(self.rng)                 # (M,)
+        de = self.comm.de_time(self.rng, m)              # (M,)
+        if participate is None:
+            participate = np.ones(cfg.n_devices, bool)
+        t_sgd = np.zeros(m)
+        e_edge = np.zeros(m)
+        for j in range(m):
+            sel = (self.edge_assign == j) & participate
+            if sel.any():
+                t_sgd[j] = et[sel].max()
+                e_edge[j] = (ee[sel] * g1[j] * g2[j]).sum()
+        t_edge = g2 * (g1 * t_sgd + de) + ec
+        t_use = float(t_edge.max())
+        e_tot = float(e_edge.sum())
+        # --- model update ---------------------------------------------------
+        if cfg.mode == "real":
+            part = jnp.asarray(participate)
+            sizes = self.fed.device_sizes() * part.astype(jnp.float32)
+            self.bank, self.global_model, self.edge_models = \
+                self._cloud_round(
+                    self.bank, self.fed.x, self.fed.y, sizes,
+                    self._edge_assign_j,
+                    jnp.asarray(np.minimum(g1, cfg.gamma_max)),
+                    jnp.asarray(np.minimum(g2, cfg.gamma_max)),
+                    self._next_key())
+            acc = float(self._acc_fn(self.global_model, self.fed.test_x,
+                                     self.fed.test_y))
+        else:
+            acc = self._analytic_update(g1, g2, participate)
+        self.acc = acc
+        self.total_energy += e_tot
+        h_edges = np.stack([t_sgd * g1 * g2, ec, e_edge], axis=1)
+        return h_edges.astype(np.float32), t_use, e_tot
+
+    def _analytic_update(self, g1, g2, participate) -> float:
+        """Saturating progress + drift/staleness penalties (calibrated to
+        real mode; see EXPERIMENTS.md §Calibration)."""
+        cfg = self.cfg
+        epochs = g1.astype(np.float64) * g2.astype(np.float64)
+        w = self._edge_sizes / self._edge_sizes.sum()
+        progress = float(np.sum(w * (1.0 - np.exp(-cfg.a_rate * epochs))))
+        drift = cfg.drift_coef * float(np.std(epochs)) / max(
+            float(np.mean(epochs)), 1.0) * cfg.a_rate
+        stale = cfg.stale_coef * cfg.a_rate * float(np.mean(
+            np.maximum(g2 - 4, 0)))
+        gap = cfg.a_max - self.acc
+        noise = self.rng.normal(0, cfg.noise)
+        new = self.acc + gap * max(progress - drift - stale, 0.0) + noise
+        return float(np.clip(new, 0.05, cfg.a_max))
+
+    # ------------------------------------------------------------------
+    def _state(self) -> np.ndarray:
+        if self.cfg.mode == "real":
+            return state_mod.build_state(
+                self.pca_state, self.global_model, self.edge_models,
+                self._h_edges, self.k, self.t_re, self.acc,
+                t_threshold=self.cfg.threshold_time)
+        # analytic mode: PCA rows replaced by per-edge epoch statistics
+        m = self.cfg.n_edges
+        s1 = np.zeros((m + 1, self.cfg.n_pca), np.float32)
+        s1[0, 0] = self.acc
+        s1[1:, 0] = self._h_edges[:, 0] / 100.0
+        s1[1:, 1] = self._h_edges[:, 2] / 50.0
+        s3 = np.array([[self.k / 50.0,
+                        self.t_re / self.cfg.threshold_time,
+                        self.acc]], np.float32)
+        s2 = self._h_edges / np.array([[100.0, 100.0, 50.0]], np.float32)
+        return np.concatenate([s1, np.concatenate([s3, s2], 0)], axis=1)
+
+    def step(self, action: np.ndarray):
+        """action: (2M,) raw continuous; projected to γ ∈ [1, γ_max]^2M
+        (§3.6 nearest-feasible-solution — with a box feasible set the
+        L2-nearest integer point is clip(round(·)))."""
+        cfg = self.cfg
+        m = cfg.n_edges
+        a = np.clip(np.round(np.asarray(action)), 1, cfg.gamma_max)
+        g1 = a[:m].astype(np.int64)
+        g2 = a[m:].astype(np.int64)
+        acc_old = self.acc
+        h_edges, t_use, e_tot = self._run_round(g1, g2)
+        self.t_re -= t_use
+        self.k += 1
+        self._h_edges = h_edges
+        r = reward_mod.reward(self.acc, acc_old, e_tot, cfg.epsilon)
+        done = self.t_re < 0
+        self.energy_hist.append(e_tot)
+        self.acc_hist.append(self.acc)
+        self.time_hist.append(t_use)
+        info = {"acc": self.acc, "energy": e_tot, "t_use": t_use,
+                "t_re": self.t_re, "g1": g1, "g2": g2}
+        return self._state(), float(r), bool(done), info
+
+    # hooks for baselines --------------------------------------------------
+    def set_topology(self, edge_assign: np.ndarray) -> None:
+        """Share baseline / re-clustering hook: replace the device->edge
+        assignment (the profiling module's periodic re-cluster, §3.1)."""
+        self.edge_assign = np.asarray(edge_assign, np.int64)
+        self._edge_assign_j = jnp.asarray(self.edge_assign)
+        self._edge_sizes = np.array(
+            [np.sum(self.edge_assign == j) * self.cfg.n_local
+             for j in range(self.cfg.n_edges)], np.float32)
+
+    def run_fixed(self, g1: int, g2: int,
+                  participate: Optional[np.ndarray] = None):
+        """One round at uniform frequencies (Vanilla-HFL / Favor / etc.)."""
+        m = self.cfg.n_edges
+        return self.step_raw(np.full(m, g1), np.full(m, g2), participate)
+
+    def step_raw(self, g1: np.ndarray, g2: np.ndarray,
+                 participate: Optional[np.ndarray] = None):
+        acc_old = self.acc
+        h_edges, t_use, e_tot = self._run_round(
+            np.asarray(g1, np.int64), np.asarray(g2, np.int64), participate)
+        self.t_re -= t_use
+        self.k += 1
+        self._h_edges = h_edges
+        r = reward_mod.reward(self.acc, acc_old, e_tot, self.cfg.epsilon)
+        self.energy_hist.append(e_tot)
+        self.acc_hist.append(self.acc)
+        self.time_hist.append(t_use)
+        info = {"acc": self.acc, "energy": e_tot, "t_use": t_use,
+                "t_re": self.t_re}
+        return self._state(), float(r), bool(self.t_re < 0), info
+
+    @property
+    def state_shape(self):
+        return (self.cfg.n_edges + 1, self.cfg.n_pca + 3)
+
+    @property
+    def action_dim(self):
+        return 2 * self.cfg.n_edges

@@ -1,0 +1,11 @@
+import numpy as np
+import pytest
+
+# NOTE: no XLA_FLAGS here on purpose — smoke tests and benches must see
+# ONE device; only the dry-run (and the subprocess sharding tests) force
+# 512/16 placeholder devices.
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,112 @@
+"""Per-architecture smoke tests (assignment requirement): a REDUCED
+same-family variant (2 layers, d_model<=512, <=4 experts) runs one
+forward + one train step on CPU; output shapes and finiteness asserted.
+The FULL configs are exercised only via the dry-run."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import all_arch_names, get_config
+from repro.data.synthetic import token_batch
+from repro.models import build_model
+
+
+def _extras(cfg, b, rng):
+    out = {}
+    if cfg.family == "audio":
+        out["enc_embed"] = jnp.asarray(
+            rng.normal(size=(b, cfg.enc_seq, cfg.d_model)), jnp.float32)
+    if cfg.family == "vlm":
+        out["vision_embed"] = jnp.asarray(
+            rng.normal(size=(b, cfg.vision_tokens, cfg.d_model)),
+            jnp.float32)
+    return out
+
+
+@pytest.mark.parametrize("arch", all_arch_names())
+def test_reduced_forward_and_train_step(arch):
+    rng = np.random.default_rng(0)
+    cfg = get_config(arch).reduce()
+    assert cfg.n_layers <= 2 and cfg.d_model <= 512
+    if cfg.moe:
+        assert cfg.moe.n_experts <= 4
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    b, s = 2, 32
+    batch = token_batch(0, b, s, cfg.vocab)
+    batch.update(_extras(cfg, b, rng))
+
+    logits = jax.jit(model.logits)(params, batch)
+    exp_s = s + (cfg.vision_tokens if cfg.family == "vlm" else 0)
+    assert logits.shape == (b, exp_s, cfg.vocab)
+    assert bool(jnp.all(jnp.isfinite(logits.astype(jnp.float32))))
+
+    # one SGD train step
+    loss, grads = jax.jit(jax.value_and_grad(model.loss))(params, batch)
+    assert jnp.isfinite(loss)
+    new = jax.tree.map(
+        lambda p, g: (p.astype(jnp.float32)
+                      - 1e-2 * g.astype(jnp.float32)).astype(p.dtype),
+        params, grads)
+    loss2 = jax.jit(model.loss)(new, batch)
+    assert jnp.isfinite(loss2)
+    for leaf in jax.tree.leaves(new):
+        assert bool(jnp.all(jnp.isfinite(leaf.astype(jnp.float32))))
+
+
+@pytest.mark.parametrize("arch", ["qwen3-1.7b", "rwkv6-1.6b", "zamba2-7b",
+                                  "olmoe-1b-7b", "whisper-base",
+                                  "qwen2-vl-7b"])
+def test_decode_matches_forward(arch):
+    """prefill(16) + decode(1) logits == full forward at those positions
+    (family-covering subset; exact for f32 paths)."""
+    rng = np.random.default_rng(1)
+    cfg = get_config(arch).reduce()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    toks = token_batch(1, 2, 17, cfg.vocab)["tokens"]
+    extras = _extras(cfg, 2, rng)
+    lg_full = model.logits(params, {"tokens": toks, **extras})
+    off = cfg.vision_tokens if cfg.family == "vlm" else 0
+    lg_pre, cache = model.prefill(params, toks[:, :16],
+                                  extras=extras or None, max_new=4)
+    np.testing.assert_allclose(np.asarray(lg_pre),
+                               np.asarray(lg_full[:, off + 15]),
+                               atol=0.05, rtol=0.05)
+    lg_dec, _ = model.decode_step(params, cache, toks[:, 16:17])
+    np.testing.assert_allclose(np.asarray(lg_dec),
+                               np.asarray(lg_full[:, off + 16]),
+                               atol=0.05, rtol=0.05)
+
+
+def test_sliding_window_decode():
+    """Ring-buffered sliding-window decode equals windowed full forward."""
+    from repro.models import transformer
+    cfg = get_config("qwen3-1.7b").reduce()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    toks = token_batch(2, 2, 80, cfg.vocab)["tokens"]
+    w = cfg.sliding_window
+    h, _ = transformer.forward_hidden(params, cfg, toks, window=w)
+    lg_full = transformer.logits_from_hidden(params, cfg, h)
+    _, cache = model.prefill(params, toks[:, :64], window=w)
+    lg = None
+    for i in range(64, 80):
+        lg, cache = model.decode_step(params, cache, toks[:, i:i + 1],
+                                      window=w)
+    np.testing.assert_allclose(np.asarray(lg),
+                               np.asarray(lg_full[:, -1]),
+                               atol=0.05, rtol=0.05)
+
+
+def test_param_counts_reasonable():
+    """Analytic n_params within 25% of actual leaf count (reduced)."""
+    from repro.models.model import count_params
+    for arch in all_arch_names():
+        cfg = get_config(arch).reduce()
+        model = build_model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        actual = count_params(params)
+        est = cfg.n_params()
+        assert 0.5 < est / actual < 2.0, (arch, est, actual)

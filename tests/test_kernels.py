@@ -1,0 +1,150 @@
+"""Pallas kernel validation: shape/dtype sweeps against the pure-jnp
+oracles (interpret=True executes the kernel body on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("b,h,hkv,sq,skv,d", [
+    (1, 2, 2, 128, 128, 64),     # MHA
+    (2, 4, 2, 256, 256, 64),     # GQA 2:1
+    (1, 8, 2, 128, 384, 128),    # GQA 4:1, rectangular
+])
+def test_flash_attention_sweep(b, h, hkv, sq, skv, d, dtype):
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.normal(size=(b, h, sq, d)), dtype)
+    k = jnp.asarray(rng.normal(size=(b, hkv, skv, d)), dtype)
+    v = jnp.asarray(rng.normal(size=(b, hkv, skv, d)), dtype)
+    out = ops.flash_attention(q, k, v, causal=True)
+    want = ref.flash_attention_ref(q, k, v, causal=True)
+    tol = 5e-6 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=tol, rtol=tol)
+
+
+@pytest.mark.parametrize("window", [64, 128])
+def test_flash_attention_window(window):
+    rng = np.random.default_rng(1)
+    q = jnp.asarray(rng.normal(size=(1, 2, 256, 64)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(1, 2, 256, 64)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(1, 2, 256, 64)), jnp.float32)
+    out = ops.flash_attention(q, k, v, causal=True, window=window)
+    want = ref.flash_attention_ref(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               atol=5e-6, rtol=5e-6)
+
+
+def test_flash_attention_q_offset_decode():
+    """One-row Q block vs absolute positions (decode shape)."""
+    rng = np.random.default_rng(2)
+    q = jnp.asarray(rng.normal(size=(2, 2, 128, 64)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(2, 2, 256, 64)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(2, 2, 256, 64)), jnp.float32)
+    out = ops.flash_attention(q, k, v, causal=True, q_offset=128)
+    want = ref.flash_attention_ref(q, k, v, causal=True, q_offset=128)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               atol=5e-6, rtol=5e-6)
+
+
+@pytest.mark.parametrize("r,n", [(2, 100), (6, 5000), (16, 40000),
+                                 (3, 2048)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_hier_agg_sweep(r, n, dtype):
+    rng = np.random.default_rng(3)
+    bank = jnp.asarray(rng.normal(size=(r, n)), dtype)
+    w = jnp.asarray(rng.uniform(0.1, 3.0, size=(r,)), jnp.float32)
+    out = ops.hier_agg(bank, w)
+    want = ref.hier_agg_ref(bank, w)
+    tol = 1e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               atol=tol, rtol=tol)
+
+
+def test_hier_agg_uniform_weights_is_mean():
+    bank = jnp.asarray(np.random.default_rng(4).normal(size=(5, 1000)),
+                       jnp.float32)
+    w = jnp.ones((5,), jnp.float32)
+    out = ops.hier_agg(bank, w)
+    np.testing.assert_allclose(np.asarray(out),
+                               np.asarray(jnp.mean(bank, 0)),
+                               atol=1e-5, rtol=1e-5)
+
+
+@pytest.mark.parametrize("chunk", [32, 64])
+@pytest.mark.parametrize("b,s,nh,hd", [(1, 128, 2, 64), (2, 192, 3, 64)])
+def test_wkv6_sweep(b, s, nh, hd, chunk):
+    if s % chunk:
+        pytest.skip("seq % chunk != 0")
+    rng = np.random.default_rng(5)
+    r = jnp.asarray(rng.normal(size=(b, s, nh, hd)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(b, s, nh, hd)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(b, s, nh, hd)), jnp.float32)
+    w = jnp.asarray(rng.uniform(0.3, 0.999, size=(b, s, nh, hd)),
+                    jnp.float32)
+    u = jnp.asarray(rng.normal(size=(nh, hd)), jnp.float32)
+    y, st = ops.wkv6(r, k, v, w, u, chunk=chunk)
+    yw, stw = ref.wkv6_ref(r, k, v, w, u)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yw),
+                               atol=2e-4, rtol=2e-4)
+    np.testing.assert_allclose(np.asarray(st), np.asarray(stw),
+                               atol=2e-4, rtol=2e-4)
+
+
+def test_wkv6_hard_decay():
+    """Strong decays (w -> 0) must not overflow the chunked form."""
+    rng = np.random.default_rng(6)
+    b, s, nh, hd = 1, 64, 1, 64
+    r = jnp.asarray(rng.normal(size=(b, s, nh, hd)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(b, s, nh, hd)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(b, s, nh, hd)), jnp.float32)
+    w = jnp.asarray(rng.uniform(1e-4, 0.1, size=(b, s, nh, hd)),
+                    jnp.float32)
+    u = jnp.asarray(rng.normal(size=(nh, hd)), jnp.float32)
+    y, st = ops.wkv6(r, k, v, w, u, chunk=32)
+    yw, stw = ref.wkv6_ref(r, k, v, w, u)
+    assert bool(jnp.all(jnp.isfinite(y)))
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yw),
+                               atol=1e-3, rtol=1e-3)
+
+
+def test_ssd_chunked_matches_scan():
+    """Mamba2 chunked SSD (model layer) vs sequential scan oracle."""
+    from repro.models import ssm
+    rng = np.random.default_rng(7)
+    b, s, nh, hd, n = 2, 100, 3, 8, 5
+    xs = jnp.asarray(rng.normal(size=(b, s, nh, hd)), jnp.float32)
+    B = jnp.asarray(rng.normal(size=(b, s, n)), jnp.float32)
+    C = jnp.asarray(rng.normal(size=(b, s, n)), jnp.float32)
+    dt = jnp.asarray(rng.uniform(0.01, 0.2, size=(b, s, nh)), jnp.float32)
+    dec = jnp.asarray(rng.uniform(0.7, 0.999, size=(b, s, nh)),
+                      jnp.float32)
+    y1, h1 = ssm.ssd_scan(xs, B, C, dt, dec)
+    y2, h2 = ssm.ssd_chunked(xs, B, C, dt, dec, chunk=16)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                               atol=1e-5, rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(h1), np.asarray(h2),
+                               atol=1e-5, rtol=1e-5)
+
+
+def test_wkv_chunked_jnp_matches_scan():
+    """Model-layer chunked WKV (the §Perf rwkv lever) vs sequential."""
+    from repro.models import rwkv
+    rng = np.random.default_rng(8)
+    b, s, nh, hd = 2, 100, 3, 64
+    r = jnp.asarray(rng.normal(size=(b, s, nh, hd)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(b, s, nh, hd)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(b, s, nh, hd)), jnp.float32)
+    w = jnp.asarray(rng.uniform(0.01, 0.999, size=(b, s, nh, hd)),
+                    jnp.float32)
+    u = jnp.asarray(rng.normal(size=(nh, hd)), jnp.float32)
+    y1, s1 = rwkv.wkv_scan(r, k, v, w, u)
+    y2, s2 = rwkv.wkv_chunked(r, k, v, w, u, chunk=32)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                               atol=5e-4, rtol=5e-4)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2),
+                               atol=5e-4, rtol=5e-4)

@@ -1,0 +1,148 @@
+"""Distribution-layer tests.
+
+The mesh/spec machinery needs >1 device, and jax pins the device count at
+first init — so the multi-device checks run in subprocesses with
+XLA_FLAGS set. The heavy production meshes are exercised by the dry-run;
+here a 16-device micro-mesh proves (a) the derived HFL mesh + param specs
+are consistent, and (b) the sharded hierarchical train step computes the
+SAME numbers as its single-device execution (sharding must be
+semantics-free).
+"""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run(src: str, n_devices: int = 16, timeout: int = 560) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (f"--xla_force_host_platform_device_count="
+                        f"{n_devices}")
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    out = subprocess.run([sys.executable, "-c", src], env=env,
+                         capture_output=True, text=True, timeout=timeout)
+    assert out.returncode == 0, out.stderr[-4000:]
+    return out.stdout
+
+
+def test_hfl_mesh_and_specs_consistent():
+    src = textwrap.dedent("""
+        import numpy as np, jax, jax.numpy as jnp
+        from jax.sharding import Mesh
+        from repro.launch import mesh as mesh_lib
+        from repro.configs import get_config
+        from repro.models import build_model
+        cfg = get_config("qwen3-1.7b").reduce()
+        devs = np.array(jax.devices()).reshape(1, 2, 2, 1, 4)
+        hfl_mesh = Mesh(devs, mesh_lib.HFL_AXES)
+        pshape = jax.eval_shape(build_model(cfg).init, jax.random.PRNGKey(0))
+        specs = mesh_lib.hfl_param_specs(cfg, pshape, hfl_mesh)
+        sh = mesh_lib.shardings(hfl_mesh, specs)
+        # every leaf must accept its sharding (shape divisibility)
+        lifted = jax.tree.map(
+            lambda a: jnp.zeros((1, 2, 2) + a.shape, a.dtype), pshape)
+        placed = jax.device_put(lifted, sh)
+        print("OK", len(jax.tree.leaves(placed)))
+    """)
+    out = _run(src)
+    assert "OK" in out
+
+
+def test_sharded_train_step_matches_single_device():
+    """hfl_train_step on a (1,2,2,1,2)-mesh == same step on 1 device."""
+    src = textwrap.dedent("""
+        import numpy as np, jax, jax.numpy as jnp
+        from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+        from repro.launch import mesh as mesh_lib, train
+        from repro.configs import get_config
+        from repro.data.synthetic import token_batch
+        from repro.models import build_model
+        import dataclasses
+        cfg = dataclasses.replace(get_config("qwen3-1.7b").reduce(),
+                                  vocab=128)
+        devs = np.array(jax.devices())[:8].reshape(1, 2, 2, 1, 2)
+        hfl_mesh = Mesh(devs, mesh_lib.HFL_AXES)
+        step, psh, bsh = train.make_hfl_train_step(
+            cfg, hfl_mesh, lr=1e-2, mb_per_epoch=2, g1=2, g2=2,
+            remat=False, attn_chunk=32)
+        model = build_model(cfg)
+        p0 = model.init(jax.random.PRNGKey(0))
+        params = train.lift_params(p0, 1, 2, 2)
+        batch = token_batch(0, 8, 32, cfg.vocab)
+        bshard = jax.tree.map(lambda _: bsh, batch)
+        sharded = jax.jit(step, in_shardings=(psh, bshard),
+                          out_shardings=psh)(params, batch)
+        plain = jax.jit(step)(params, batch)
+        errs = jax.tree.map(
+            lambda a, b: float(jnp.max(jnp.abs(a.astype(jnp.float32)
+                                               - b.astype(jnp.float32)))),
+            sharded, plain)
+        m = max(jax.tree.leaves(errs))
+        print("MAXERR", m)
+        assert m < 5e-3, m
+        # replicas synchronized after the cloud round
+        w = np.asarray(sharded["final_norm"], np.float32)
+        assert np.abs(w - w[0, 0, 0]).max() < 1e-5
+    """)
+    out = _run(src)
+    assert "MAXERR" in out
+
+
+def test_dynamic_freqs_match_static():
+    """The masked dynamic-γ path equals the static path at equal freqs."""
+    src = textwrap.dedent("""
+        import numpy as np, jax, jax.numpy as jnp, dataclasses
+        from jax.sharding import Mesh
+        from repro.launch import mesh as mesh_lib, train
+        from repro.configs import get_config
+        from repro.data.synthetic import token_batch
+        from repro.models import build_model
+        cfg = dataclasses.replace(get_config("qwen3-1.7b").reduce(),
+                                  vocab=128)
+        devs = np.array(jax.devices())[:8].reshape(1, 2, 2, 1, 2)
+        hfl_mesh = Mesh(devs, mesh_lib.HFL_AXES)
+        kw = dict(lr=1e-2, mb_per_epoch=2, remat=False, attn_chunk=32)
+        step_s, psh, bsh = train.make_hfl_train_step(
+            cfg, hfl_mesh, g1=2, g2=1, **kw)
+        step_d, _, _ = train.make_hfl_train_step(
+            cfg, hfl_mesh, dynamic=True, max_g1=3, max_g2=2, **kw)
+        model = build_model(cfg)
+        params = train.lift_params(model.init(jax.random.PRNGKey(0)),
+                                   1, 2, 2)
+        batch = token_batch(0, 8, 32, cfg.vocab)
+        a = jax.jit(step_s)(params, batch)
+        g1e = jnp.full((2,), 2, jnp.int32)
+        g2e = jnp.full((2,), 1, jnp.int32)
+        b = jax.jit(step_d)(params, batch, g1e, g2e)
+        errs = jax.tree.map(
+            lambda x, y: float(jnp.max(jnp.abs(
+                x.astype(jnp.float32) - y.astype(jnp.float32)))), a, b)
+        m = max(jax.tree.leaves(errs))
+        print("MAXERR", m)
+        assert m < 5e-3, m
+    """)
+    out = _run(src)
+    assert "MAXERR" in out
+
+
+def test_make_production_mesh_shapes():
+    src = textwrap.dedent("""
+        from repro.launch import mesh as mesh_lib
+        m1 = mesh_lib.make_production_mesh()
+        assert dict(m1.shape) == {"data": 16, "model": 16}, m1.shape
+        m2 = mesh_lib.make_production_mesh(multi_pod=True)
+        assert dict(m2.shape) == {"pod": 2, "data": 16, "model": 16}
+        h = mesh_lib.derive_hfl_mesh(m2, (4, 4, 1, 16))
+        assert dict(h.shape) == {"pod": 2, "edge": 4, "fl": 4,
+                                 "fsdp": 1, "tp": 16}
+        s = mesh_lib.derive_serve_mesh(m1, 8)
+        assert dict(s.shape) == {"pod": 1, "batch": 32, "tp": 8}
+        print("OK")
+    """)
+    out = _run(src, n_devices=512)
+    assert "OK" in out

@@ -1,0 +1,66 @@
+"""End-to-end behaviour of the faithful Arena reproduction (real mode,
+reduced scale: actual CNN training on federated synthetic data)."""
+import numpy as np
+import pytest
+
+from repro.sim import EnvConfig, HFLEnv
+
+
+@pytest.fixture(scope="module")
+def real_env():
+    cfg = EnvConfig(task="mnist", mode="real", n_devices=8, n_edges=2,
+                    n_local=96, batch_size=32, threshold_time=240.0,
+                    gamma_max=3, seed=0)
+    return HFLEnv(cfg)
+
+
+def test_real_round_improves_accuracy(real_env):
+    env = real_env
+    env.reset()
+    accs = [env.acc]
+    done = False
+    while not done:
+        _, r, done, info = env.step(np.full(env.action_dim, 2.0))
+        accs.append(info["acc"])
+    # actual learning happened within the threshold time
+    assert max(accs) > accs[0] + 0.15, accs
+    assert env.total_energy > 0
+
+
+def test_real_state_contains_pca_and_costs(real_env):
+    env = real_env
+    s = env.reset()
+    assert s.shape == (3, 9)
+    assert np.isfinite(s).all()
+    # PCA rows should not be all-zero (models differ between edges after
+    # the warmup round with non-IID data)
+    assert np.abs(s[:, :6]).max() > 0
+
+
+def test_profiling_vs_no_profiling_topology_differs():
+    c1 = EnvConfig(task="mnist", mode="real", n_devices=8, n_edges=2,
+                   n_local=64, threshold_time=60.0, seed=3,
+                   use_profiling=True)
+    c2 = EnvConfig(task="mnist", mode="real", n_devices=8, n_edges=2,
+                   n_local=64, threshold_time=60.0, seed=3,
+                   use_profiling=False)
+    e1, e2 = HFLEnv(c1), HFLEnv(c2)
+    # profiling clusters by capability; round-robin ignores it
+    spread1 = np.mean([e1.profiles.cpu_usage[e1.edge_assign == j].std()
+                       for j in range(2)])
+    spread2 = np.mean([e2.profiles.cpu_usage[e2.edge_assign == j].std()
+                       for j in range(2)])
+    assert spread1 <= spread2 + 1e-9
+
+
+def test_straggler_time_model(real_env):
+    """Round time = max over edges (γ2(γ1 t_sgd + de) + ec): raising one
+    edge's γ raises t_use."""
+    env = real_env
+    env.reset()
+    m = env.cfg.n_edges
+    _, _, _, lo = env.step_raw(np.ones(m), np.ones(m))
+    g1 = np.ones(m)
+    g1[0] = 3
+    _, _, _, hi = env.step_raw(g1, np.full(m, 2))
+    assert hi["t_use"] > lo["t_use"]
