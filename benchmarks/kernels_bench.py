@@ -1,7 +1,11 @@
-"""Kernel micro-benchmarks: oracle (pure-jnp) wall time on CPU as the
-portable reference, plus the analytic VMEM/HBM traffic ratio the Pallas
-kernel achieves vs the naive formulation (the TPU-relevant number — the
-container cannot time Mosaic)."""
+"""Kernel micro-benchmarks: pure-jnp oracle vs Pallas kernel wall time
+on CPU (interpret mode — the portable reference; the container cannot
+time Mosaic), plus the analytic HBM traffic ratio each kernel achieves
+vs the naive formulation (the TPU-relevant number).
+
+Rows are persisted to ``BENCH_kernels.json`` by ``benchmarks.run`` (the
+``ARTIFACT`` hook) so the perf trajectory of the hot path is recorded
+per commit."""
 from __future__ import annotations
 
 import time
@@ -10,7 +14,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.kernels import ref
+from repro.core import flatbank
+from repro.kernels import ops, ref
+
+ARTIFACT = "BENCH_kernels.json"
 
 
 def _time(fn, *args, iters=3):
@@ -56,13 +63,59 @@ def run(quick: bool = True):
                  "hbm_bytes_scan": state_bytes * 2 * s,
                  "hbm_bytes_kernel": state_bytes * 2 * (s // chunk),
                  "traffic_ratio": float(chunk)})
-    # hier_agg: R replica models, fused scale+reduce
-    bank = jnp.asarray(rng.normal(size=(8, 500_000)), jnp.float32)
-    w = jnp.ones((8,), jnp.float32)
+    # ------------------------------------------------------------------
+    # hier_agg (legacy single-segment): oracle vs kernel path
+    nrep, p1 = 8, 500_000
+    bank = jnp.asarray(rng.normal(size=(nrep, p1)), jnp.float32)
+    w = jnp.ones((nrep,), jnp.float32)
     us = _time(jax.jit(ref.hier_agg_ref), bank, w)
+    us_k = _time(lambda b_, w_: ops.hier_agg(b_, w_), bank, w)
     rows.append({"setting": "hier_agg_8x500k",
                  "oracle_us_per_call": round(us, 1),
+                 "kernel_us_per_call": round(us_k, 1),
                  "hbm_bytes_naive": int(bank.size * 4 * 2),
                  "hbm_bytes_kernel": int(bank.size * 4 + bank.size // 8 * 4),
                  "traffic_ratio": 2.0})
+    # ------------------------------------------------------------------
+    # segment_agg (flat-bank hot path): 64 devices x 8 edges x 500k
+    # params. Naive per-leaf tree path round-trips HBM 3x: weight-scale
+    # f32 temp (write+read N*P), segment scatter-add (write E*P, read
+    # E*P), normalize (write E*P). Fused kernel: read N*P once, write
+    # E*P once, normalization in-kernel.
+    n_dev, n_edge, p2 = 64, 8, 500_000
+    mat = jnp.asarray(rng.normal(size=(n_dev, p2)), jnp.float32)
+    wd = jnp.asarray(rng.uniform(0.5, 2.0, size=(n_dev,)), jnp.float32)
+    seg = jnp.asarray(rng.integers(0, n_edge, size=(n_dev,)), jnp.int32)
+    us = _time(jax.jit(lambda *a: ref.segment_agg_ref(*a, n_edge)),
+               mat, wd, seg)
+    us_k = _time(lambda *a: ops.segment_agg(*a, n_edge), mat, wd, seg)
+    naive_hbm = 4 * (3 * n_dev * p2 + 3 * n_edge * p2)
+    kern_hbm = 4 * (n_dev * p2 + n_edge * p2)
+    rows.append({"setting": "segment_agg_64x8x500k",
+                 "oracle_us_per_call": round(us, 1),
+                 "kernel_us_per_call": round(us_k, 1),
+                 "hbm_bytes_naive": naive_hbm,
+                 "hbm_bytes_kernel": kern_hbm,
+                 "traffic_ratio": round(naive_hbm / kern_hbm, 2)})
+    # ------------------------------------------------------------------
+    # end-to-end aggregation: per-leaf tree-path oracle vs flat-bank
+    # engine (flatten -> segment_agg -> unflatten) on a nested pytree
+    leaf = p2 // 4
+    tree_bank = {"a": mat[:, :leaf].reshape(n_dev, 500, 250),
+                 "b": {"w": mat[:, leaf:3 * leaf],
+                       "v": mat[:, 3 * leaf:]}}
+    us_tree = _time(jax.jit(
+        lambda b_, w_, s_: ref.weighted_aggregate_ref(b_, w_, s_, n_edge)),
+        tree_bank, wd, seg)
+
+    def flat_path(b_, w_, s_):
+        spec = flatbank.bank_spec(b_)
+        return spec.unflatten(
+            ops.segment_agg(spec.flatten(b_), w_, s_, n_edge))
+
+    us_flat = _time(jax.jit(flat_path), tree_bank, wd, seg)
+    rows.append({"setting": "flatbank_agg_64x8x500k",
+                 "tree_path_us_per_call": round(us_tree, 1),
+                 "flat_path_us_per_call": round(us_flat, 1),
+                 "speedup": round(us_tree / max(us_flat, 1e-9), 2)})
     return rows

@@ -4,7 +4,9 @@ and kernel tables for the TPU framework path).
     PYTHONPATH=src python -m benchmarks.run [--full] [--only NAME]
 
 Prints ``name,metric,value`` CSV rows (collated per module) and writes
-reports/bench_results.json.
+reports/bench_results.json. Modules may declare ``ARTIFACT = "<path>"``
+to additionally persist their rows standalone (kernels_bench writes
+``BENCH_kernels.json`` — the hot-path perf trajectory).
 """
 from __future__ import annotations
 
@@ -50,6 +52,12 @@ def main() -> None:
             results[name] = {"error": repr(e)}
             continue
         results[name] = rows
+        artifact = getattr(mod, "ARTIFACT", None)
+        if artifact:
+            # per-module perf artifact (e.g. BENCH_kernels.json) so the
+            # hot-path trajectory is recorded per commit
+            with open(artifact, "w") as f:
+                json.dump(rows, f, indent=1)
         for r in rows:
             tag = r.get("scheme", r.get("setting", ""))
             for k, v in r.items():

@@ -1,0 +1,7 @@
+#!/usr/bin/env bash
+# One reproducible verify entry point: the tier-1 test command from
+# ROADMAP.md. Extra pytest args pass through (e.g. scripts/ci.sh -k flat).
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+exec python -m pytest -x -q "$@"

@@ -1,0 +1,114 @@
+"""Flat-bank engine: the model bank as one ``(N, P)`` matrix.
+
+The HFL hot loop (Eqs. 1/2/5) is pure linear algebra over the *bank* —
+every device's parameters stacked on a leading axis. Running it per-leaf
+(``jax.tree.map`` + ``jax.ops.segment_sum``) costs one scatter-add plus
+f32 temporaries per leaf per round. The flat-bank engine instead
+flattens the pytree **once** into a single ``(N, P)`` parameter matrix
+and routes aggregation/resync through the fused Pallas kernels in
+``repro.kernels.hier_agg``:
+
+* ``BankSpec`` — cached flattening recipe: treedef + per-leaf trailing
+  shape/dtype/size/offset and the flat storage dtype. One spec serves
+  every row count (device bank ``(N, P)``, edge models ``(E, P)``, a
+  single model ``(P,)``) because only trailing shapes are recorded.
+* dtype handling — if every leaf shares one dtype the flat matrix keeps
+  it (a bf16 bank stays bf16 end to end; the kernels upcast tiles to
+  f32 in VMEM only). Mixed-dtype banks promote to f32 for the flat
+  view; ``unflatten`` always casts each leaf back to its stored dtype,
+  so round-trips preserve the bank exactly.
+The Eq. 1/2 weighted segment mean itself runs on the flat matrix via
+``repro.kernels.ops.segment_agg`` (normalization fused in-kernel) —
+see ``repro.core.hfl.weighted_aggregate`` for the wiring.
+
+Specs are cached on (treedef, shapes, dtypes) so repeated flattening —
+e.g. inside a scanned cloud round — re-derives nothing.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class BankSpec:
+    """Flattening recipe for one bank/model pytree structure."""
+    treedef: Any
+    shapes: tuple          # per-leaf trailing shape (no row axis)
+    dtypes: tuple          # per-leaf storage dtype
+    sizes: tuple           # per-leaf parameter count
+    offsets: tuple         # per-leaf column offset into the flat matrix
+    width: int             # P = total parameters per row
+    dtype: Any             # flat matrix dtype (common leaf dtype or f32)
+
+    # -- flat views ------------------------------------------------------
+    def flatten(self, bank):
+        """Bank pytree (leaves (rows, *shape)) -> (rows, P) matrix."""
+        leaves = self.treedef.flatten_up_to(bank)
+        rows = leaves[0].shape[0]
+        cols = [l.reshape(rows, -1).astype(self.dtype) for l in leaves]
+        return cols[0] if len(cols) == 1 else jnp.concatenate(cols, axis=1)
+
+    def unflatten(self, mat):
+        """(rows, P) matrix -> bank pytree, leaf dtypes restored."""
+        rows = mat.shape[0]
+        leaves = [
+            mat[:, o:o + s].reshape((rows,) + shp).astype(dt)
+            for o, s, shp, dt in zip(self.offsets, self.sizes,
+                                     self.shapes, self.dtypes)]
+        return jax.tree_util.tree_unflatten(self.treedef, leaves)
+
+    def flatten_model(self, model):
+        """Single model pytree -> (P,) vector."""
+        leaves = self.treedef.flatten_up_to(model)
+        cols = [l.reshape(-1).astype(self.dtype) for l in leaves]
+        return cols[0] if len(cols) == 1 else jnp.concatenate(cols)
+
+    def unflatten_model(self, vec):
+        """(P,) vector -> single model pytree, leaf dtypes restored."""
+        leaves = [
+            vec[o:o + s].reshape(shp).astype(dt)
+            for o, s, shp, dt in zip(self.offsets, self.sizes,
+                                     self.shapes, self.dtypes)]
+        return jax.tree_util.tree_unflatten(self.treedef, leaves)
+
+
+_SPEC_CACHE: dict = {}
+
+
+def _build_spec(treedef, shapes, dtypes) -> BankSpec:
+    sizes = tuple(int(np.prod(s, dtype=np.int64)) for s in shapes)
+    offsets = tuple(int(o) for o in np.cumsum((0,) + sizes)[:-1])
+    flat_dtype = dtypes[0] if all(d == dtypes[0] for d in dtypes) \
+        else jnp.dtype(jnp.float32)
+    return BankSpec(treedef=treedef, shapes=shapes, dtypes=dtypes,
+                    sizes=sizes, offsets=offsets,
+                    width=int(sum(sizes)), dtype=flat_dtype)
+
+
+def bank_spec(bank) -> BankSpec:
+    """Spec for a bank pytree whose leaves carry a leading row axis."""
+    leaves, treedef = jax.tree_util.tree_flatten(bank)
+    shapes = tuple(l.shape[1:] for l in leaves)
+    dtypes = tuple(jnp.dtype(l.dtype) for l in leaves)
+    key = (treedef, shapes, dtypes)
+    spec = _SPEC_CACHE.get(key)
+    if spec is None:
+        spec = _SPEC_CACHE[key] = _build_spec(treedef, shapes, dtypes)
+    return spec
+
+
+def model_spec(model) -> BankSpec:
+    """Spec for a single model pytree (no leading row axis)."""
+    leaves, treedef = jax.tree_util.tree_flatten(model)
+    shapes = tuple(l.shape for l in leaves)
+    dtypes = tuple(jnp.dtype(l.dtype) for l in leaves)
+    key = (treedef, shapes, dtypes)
+    spec = _SPEC_CACHE.get(key)
+    if spec is None:
+        spec = _SPEC_CACHE[key] = _build_spec(treedef, shapes, dtypes)
+    return spec

@@ -5,9 +5,21 @@ leaves carry a leading ``N_devices`` axis; device-local training vmaps
 over it. Edge aggregation (Eq. 1) is a dataset-size-weighted segment-sum
 over the bank; cloud aggregation (Eq. 2) the same over edge models.
 
+Aggregation routes through the **flat-bank engine**
+(``repro.core.flatbank`` + the ``segment_agg`` / ``segment_broadcast``
+Pallas kernels): the bank pytree is flattened once per round into a
+single ``(N, P)`` matrix, the weighted segment means run as one fused
+kernel launch per aggregation (normalization in-kernel, no per-leaf f32
+temporaries), and the edge->device resync is a fused gather emitted
+directly in the bank's storage dtype. The old per-leaf tree path lives
+on as the parity oracle ``repro.kernels.ref.weighted_aggregate_ref``.
+
 Per-edge frequencies (γ1_j, γ2_j) are traced values — one compiled
 ``hfl_cloud_round`` serves every action the agent picks, via masked
-upper-bound loops (``max_g1``/``max_g2`` static).
+upper-bound loops (``max_g1``/``max_g2`` static). ``make_cloud_round``
+and ``make_fedavg_round`` return jit-compiled rounds that donate the
+incoming bank buffer, so steady-state training re-uses the bank
+allocation instead of copying it every round.
 """
 from __future__ import annotations
 
@@ -16,6 +28,9 @@ from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
+
+from repro.core import flatbank
+from repro.kernels import ops
 
 
 # ---------------------------------------------------------------------------
@@ -38,27 +53,23 @@ def bank_select(bank, i: int):
 
 
 # ---------------------------------------------------------------------------
-# aggregation (Eqs. 1 and 2)
+# aggregation (Eqs. 1 and 2) — flat-bank path
 # ---------------------------------------------------------------------------
 
 def weighted_aggregate(bank, weights, segment_ids, num_segments: int):
-    """Generic dataset-size-weighted aggregation.
+    """Generic dataset-size-weighted aggregation on the flat bank.
 
     bank leaves: (N, ...); weights: (N,) |D_i|; segment_ids: (N,) edge of
     each device. Returns pytree with leading ``num_segments`` axis:
         out_j = sum_{i in j} w_i x_i / sum_{i in j} w_i          (Eq. 1)
+
+    One ``segment_agg`` kernel launch over the flattened ``(N, P)``
+    bank; leaf dtypes are restored on unflatten.
     """
-    wsum = jax.ops.segment_sum(weights, segment_ids, num_segments)
-    wsum = jnp.maximum(wsum, 1e-9)
-
-    def agg(leaf):
-        w = weights.reshape((-1,) + (1,) * (leaf.ndim - 1)).astype(jnp.float32)
-        s = jax.ops.segment_sum(leaf.astype(jnp.float32) * w, segment_ids,
-                                num_segments)
-        return (s / wsum.reshape((-1,) + (1,) * (leaf.ndim - 1))).astype(
-            leaf.dtype)
-
-    return jax.tree.map(agg, bank)
+    spec = flatbank.bank_spec(bank)
+    out = ops.segment_agg(spec.flatten(bank), weights, segment_ids,
+                          num_segments)
+    return spec.unflatten(out)
 
 
 def edge_aggregate(bank, device_sizes, edge_assign, n_edges: int):
@@ -69,9 +80,10 @@ def edge_aggregate(bank, device_sizes, edge_assign, n_edges: int):
 def cloud_aggregate(edge_models, edge_sizes):
     """Eq. 2: w = Σ_j |D_j| w_j^e / Σ_j |D_j| (single segment)."""
     n = edge_sizes.shape[0]
-    agg = weighted_aggregate(edge_models, edge_sizes,
-                             jnp.zeros((n,), jnp.int32), 1)
-    return jax.tree.map(lambda a: a[0], agg)
+    spec = flatbank.bank_spec(edge_models)
+    out = ops.segment_agg(spec.flatten(edge_models), edge_sizes,
+                          jnp.zeros((n,), jnp.int32), 1)
+    return spec.unflatten_model(out[0])
 
 
 # ---------------------------------------------------------------------------
@@ -134,7 +146,7 @@ def make_local_trainer(loss_fn: Callable, lr: float, batch_size: int):
 
 def make_cloud_round(loss_fn: Callable, lr: float, batch_size: int,
                      n_edges: int, max_g1: int, max_g2: int):
-    """Builds a jittable ``cloud_round``:
+    """Builds a jit-compiled ``cloud_round`` (bank buffer donated):
 
     cloud_round(bank, x, y, sizes, edge_assign, g1 (M,), g2 (M,), key)
       -> (bank synced to the new global model, global model, edge models)
@@ -142,42 +154,47 @@ def make_cloud_round(loss_fn: Callable, lr: float, batch_size: int,
     Composition per Eq. 5: for t2 < γ2_j, devices of edge j run γ1_j local
     epochs then edge-aggregate; edges past their γ2_j freeze; finally the
     cloud aggregates the edge models and broadcasts.
+
+    The t2 loop carries the edge models as a flat ``(E, P)`` f32 matrix:
+    each step flattens the trained bank once, edge-aggregates in one
+    ``segment_agg`` launch, masks frozen edges with a single 2-D
+    ``where``, and resyncs the bank through ``segment_broadcast`` — no
+    per-leaf tree traffic inside the scan.
     """
     local_train = make_local_trainer(loss_fn, lr, batch_size)
 
     def cloud_round(bank, x, y, sizes, edge_assign, g1, g2, key):
+        spec = flatbank.bank_spec(bank)
         g1_dev = g1[edge_assign]
         g2_dev = g2[edge_assign]
 
         def t2_step(carry, t2):
-            bank, edge_models, key = carry
+            bank, edge_mat, key = carry
             key, sub = jax.random.split(key)
             active_dev = t2 < g2_dev
             g1_eff = jnp.where(active_dev, g1_dev, 0)
             bank = local_train(bank, x, y, g1_eff, max_g1, sub)
-            agg = edge_aggregate(bank, sizes, edge_assign, n_edges)
-            active_edge = (t2 < g2).reshape((-1,))
-
-            def mask_e(old, new):
-                am = active_edge.reshape((-1,) + (1,) * (old.ndim - 1))
-                return jnp.where(am, new, old)
-
-            edge_models = jax.tree.map(mask_e, edge_models, agg)
+            agg = ops.segment_agg(spec.flatten(bank), sizes, edge_assign,
+                                  n_edges)
+            active_edge = (t2 < g2).reshape(-1, 1)
+            edge_mat = jnp.where(active_edge, agg, edge_mat)
             # devices resume from their edge's current model
-            bank = jax.tree.map(lambda e: e[edge_assign], edge_models)
-            return (bank, edge_models, key), None
+            bank = spec.unflatten(ops.segment_broadcast(
+                edge_mat, edge_assign, out_dtype=spec.dtype))
+            return (bank, edge_mat, key), None
 
-        edge_models0 = edge_aggregate(bank, sizes, edge_assign, n_edges)
-        (bank, edge_models, _), _ = jax.lax.scan(
-            t2_step, (bank, edge_models0, key), jnp.arange(max_g2))
+        edge_mat0 = ops.segment_agg(spec.flatten(bank), sizes, edge_assign,
+                                    n_edges)
+        (bank, edge_mat, _), _ = jax.lax.scan(
+            t2_step, (bank, edge_mat0, key), jnp.arange(max_g2))
         edge_sizes = jax.ops.segment_sum(sizes, edge_assign, n_edges)
-        global_model = cloud_aggregate(edge_models, edge_sizes)
-        bank = jax.tree.map(
-            lambda a: jnp.broadcast_to(a, (x.shape[0],) + a.shape),
-            global_model)
-        return bank, global_model, edge_models
+        glob = ops.segment_agg(edge_mat, edge_sizes,
+                               jnp.zeros((n_edges,), jnp.int32), 1)[0]
+        global_model = spec.unflatten_model(glob)
+        bank = broadcast_model(global_model, x.shape[0])
+        return bank, global_model, spec.unflatten(edge_mat)
 
-    return cloud_round
+    return jax.jit(cloud_round, donate_argnums=(0,))
 
 
 # ---------------------------------------------------------------------------
@@ -187,19 +204,20 @@ def make_cloud_round(loss_fn: Callable, lr: float, batch_size: int,
 def make_fedavg_round(loss_fn: Callable, lr: float, batch_size: int,
                       max_g1: int):
     """FedAvg with random participation: selected devices run γ1 local
-    epochs, the cloud aggregates them directly (γ2 ≡ 1)."""
+    epochs, the cloud aggregates them directly (γ2 ≡ 1). Jit-compiled,
+    bank donated; the single-segment aggregation runs on the flat bank."""
     local_train = make_local_trainer(loss_fn, lr, batch_size)
 
     def round_(bank, x, y, sizes, participate, g1, key):
         n = x.shape[0]
+        spec = flatbank.bank_spec(bank)
         g1_dev = jnp.where(participate, g1, 0)
         bank = local_train(bank, x, y, g1_dev, max_g1, key)
         w = sizes * participate.astype(sizes.dtype)
-        agg = weighted_aggregate(bank, w, jnp.zeros((n,), jnp.int32), 1)
-        global_model = jax.tree.map(lambda a: a[0], agg)
-        bank = jax.tree.map(
-            lambda a: jnp.broadcast_to(a, (n,) + a.shape), global_model)
+        glob = ops.segment_agg(spec.flatten(bank), w,
+                               jnp.zeros((n,), jnp.int32), 1)[0]
+        global_model = spec.unflatten_model(glob)
+        bank = broadcast_model(global_model, n)
         return bank, global_model
 
-    return round_
-
+    return jax.jit(round_, donate_argnums=(0,))

@@ -1,8 +1,13 @@
 """Pallas TPU kernels for the compute hot spots (DESIGN.md §5):
 
-  hier_agg        — Arena's edge/cloud weighted model aggregation
-  flash_attention — GQA causal/sliding-window attention (VMEM-tiled)
-  wkv6            — RWKV6 chunked data-dependent-decay recurrence
+  segment_agg       — Arena's fused segment-weighted bank aggregation
+                      (Eqs. 1/2 on the flat (N, P) bank; normalization
+                      in-kernel). ``hier_agg`` is its single-segment
+                      legacy API.
+  segment_broadcast — fused edge->device bank resync (one-hot gather,
+                      written in the bank's storage dtype)
+  flash_attention   — GQA causal/sliding-window attention (VMEM-tiled)
+  wkv6              — RWKV6 chunked data-dependent-decay recurrence
 
 Each kernel ships with a pure-jnp oracle in ``ref.py`` and a jit'd
 wrapper in ``ops.py``; correctness is validated in interpret mode on CPU

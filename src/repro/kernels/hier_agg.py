@@ -1,48 +1,155 @@
-"""Hierarchical weighted model aggregation (TPU Pallas).
+"""Segment-weighted model aggregation + bank resync (TPU Pallas).
 
-Arena's hot spot: Eq. 1/2 — the dataset-size-weighted mean of R replica
-parameter vectors. One grid step owns one (R, BN) tile resident in VMEM,
-scales by the weight vector (SMEM-resident scalars via a (R,1) block)
-and reduces over R — fused scale+accumulate, no (R, N) f32 intermediate
-in HBM. BN = 2048 f32 keeps the tile ≤ R·8 KiB, 128-aligned.
+Arena's hot spot (Eqs. 1/2): dataset-size-weighted means over the flat
+model bank. The flat-bank engine (``repro.core.flatbank``) presents the
+whole device bank as one ``(N, P)`` matrix; the kernels here do the two
+hot-path operations in one launch each:
+
+``segment_agg``
+    ``(N, P) bank × (N,) weights × (N,) segment_ids -> (E, P)`` — the
+    per-edge (or cloud, E=1) weighted mean. The grid tiles P; one grid
+    step owns an ``(N, BN)`` column block resident in VMEM, builds the
+    ``(E, N)`` weighted one-hot assignment from an iota/segment-id
+    compare, and reduces over N on the MXU. Normalization is fused: the
+    per-segment inverse weight sum enters as an ``(E, 1)`` input (it
+    depends on traced weights, so it is an array, not a static) and the
+    multiply happens before the tile is written — no post-hoc pass over
+    the ``(E, P)`` output and no ``(N, P)`` f32 weighted temporary in
+    HBM. HBM traffic is the optimal ``N·P`` read + ``E·P`` write versus
+    the per-leaf tree path's 3 round trips (weight-scale temp, segment
+    sum, normalize).
+
+``segment_broadcast``
+    ``(E, P) edge models × (N,) segment_ids -> (N, P)`` — resyncs every
+    device row from its edge's model (the Eq. 5 "devices resume from
+    their edge" step). The gather is a one-hot matmul per column tile
+    and the output is written directly in the bank's storage dtype, so
+    no ``(N, P)`` f32 intermediate is materialized when the bank is
+    stored in bf16.
+
+``hier_agg`` (legacy API) is the single-segment special case,
+``segment_agg(..., num_segments=1)[0]``.
+
+Tile sizing: ``bn=None`` picks the widest column tile that keeps the
+resident blocks within a VMEM budget (8 MiB compiled; effectively
+"all columns" in interpret mode, where each grid step pays a full
+input copy and a 1-step grid is fastest). Explicit ``bn`` must be a
+multiple of 128 (the TPU lane width); P is padded up internally.
 """
 from __future__ import annotations
-
-import functools
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-
-def _agg_kernel(w_ref, x_ref, o_ref, *, inv_wsum: float):
-    x = x_ref[...].astype(jnp.float32)         # (R, BN)
-    w = w_ref[...].astype(jnp.float32)         # (R, 1)
-    o_ref[...] = (jnp.sum(x * w, axis=0, keepdims=True)
-                  * inv_wsum).astype(o_ref.dtype)
+_LANE = 128
 
 
-def hier_agg(bank, weights, *, bn: int = 2048, interpret: bool = True):
-    """bank: (R, N); weights: (R,). Returns weighted mean (N,) f32.
-    Pads N up to a BN multiple internally."""
-    r, n = bank.shape
-    n_pad = -(-n // bn) * bn
-    if n_pad != n:
-        bank = jnp.pad(bank, ((0, 0), (0, n_pad - n)))
-    # weights may be traced: normalize after the kernel
-    w2 = weights.reshape(r, 1).astype(jnp.float32)
-    kernel = functools.partial(_agg_kernel, inv_wsum=1.0)
+def _round_up(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+def _auto_bn(p: int, rows_in: int, rows_out: int, interpret: bool) -> int:
+    """Widest 128-multiple column tile whose resident blocks fit the
+    budget: interpret mode copies full inputs per grid step, so it gets
+    a large budget (few grid steps); compiled mode respects VMEM."""
+    budget = (256 if interpret else 8) * 1024 * 1024
+    bytes_per_col = 4 * (rows_in + rows_out)
+    cap = max(_LANE, budget // bytes_per_col // _LANE * _LANE)
+    return min(_round_up(p, _LANE), cap)
+
+
+def _segment_agg_kernel(seg_ref, w_ref, inv_ref, x_ref, o_ref):
+    """One (N, BN) column tile -> (E, BN) weighted segment means."""
+    e, n = o_ref.shape[0], x_ref.shape[0]
+    ids = jax.lax.broadcasted_iota(jnp.int32, (e, n), 0)
+    # (E, N) weighted one-hot assignment, built in VMEM
+    a = jnp.where(ids == seg_ref[...], w_ref[...].astype(jnp.float32), 0.0)
+    acc = jnp.dot(a, x_ref[...].astype(jnp.float32),
+                  preferred_element_type=jnp.float32)
+    o_ref[...] = (acc * inv_ref[...]).astype(o_ref.dtype)
+
+
+def segment_agg(bank, weights, segment_ids, num_segments: int, *,
+                bn: int | None = None, interpret: bool = True):
+    """bank: (N, P); weights: (N,); segment_ids: (N,) int. Returns the
+    per-segment weighted means (num_segments, P) f32:
+
+        out[j] = sum_{i: seg_i=j} w_i bank[i] / max(sum w_i, 1e-9)
+
+    Empty segments return zeros (the weight-sum clamp), matching the
+    tree-path oracle. Weights may be traced; the inverse weight sums are
+    computed outside and enter the kernel as an (E, 1) input so the
+    normalization still happens in-kernel.
+    """
+    n, p = bank.shape
+    e = int(num_segments)
+    if bn is None:
+        bn = _auto_bn(p, n, e, interpret)
+    p_pad = _round_up(p, bn)
+    if p_pad != p:
+        bank = jnp.pad(bank, ((0, 0), (0, p_pad - p)))
+    w32 = weights.astype(jnp.float32)
+    wsum = jnp.maximum(jax.ops.segment_sum(w32, segment_ids, e), 1e-9)
+    inv = (1.0 / wsum).reshape(e, 1)
     out = pl.pallas_call(
-        kernel,
-        grid=(n_pad // bn,),
+        _segment_agg_kernel,
+        grid=(p_pad // bn,),
         in_specs=[
-            pl.BlockSpec((r, 1), lambda i: (0, 0)),
-            pl.BlockSpec((r, bn), lambda i: (0, i)),
+            pl.BlockSpec((1, n), lambda i: (0, 0)),      # segment ids
+            pl.BlockSpec((1, n), lambda i: (0, 0)),      # weights
+            pl.BlockSpec((e, 1), lambda i: (0, 0)),      # 1/wsum
+            pl.BlockSpec((n, bn), lambda i: (0, i)),     # bank tile
         ],
-        out_specs=pl.BlockSpec((1, bn), lambda i: (0, i)),
-        out_shape=jax.ShapeDtypeStruct((1, n_pad), jnp.float32),
+        out_specs=pl.BlockSpec((e, bn), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((e, p_pad), jnp.float32),
         interpret=interpret,
-    )(w2, bank)
-    out = out[0, :n] / jnp.maximum(jnp.sum(weights.astype(jnp.float32)),
-                                   1e-9)
-    return out
+    )(segment_ids.reshape(1, n).astype(jnp.int32),
+      w32.reshape(1, n), inv, bank)
+    return out[:, :p]
+
+
+def _segment_bcast_kernel(seg_ref, m_ref, o_ref):
+    """One (E, BN) model tile -> (N, BN) gathered bank tile."""
+    n, e = o_ref.shape[0], m_ref.shape[0]
+    ids = jax.lax.broadcasted_iota(jnp.int32, (n, e), 1)
+    a = (ids == seg_ref[...]).astype(jnp.float32)        # (N, E) one-hot
+    o_ref[...] = jnp.dot(a, m_ref[...].astype(jnp.float32),
+                         preferred_element_type=jnp.float32
+                         ).astype(o_ref.dtype)
+
+
+def segment_broadcast(models, segment_ids, *, out_dtype=None,
+                      bn: int | None = None, interpret: bool = True):
+    """models: (E, P); segment_ids: (N,) int. Returns (N, P) with
+    ``out[i] = models[segment_ids[i]]`` cast to ``out_dtype`` (default:
+    models.dtype) as it is written — the fused bank resync."""
+    e, p = models.shape
+    n = segment_ids.shape[0]
+    out_dtype = jnp.dtype(out_dtype or models.dtype)
+    if bn is None:
+        bn = _auto_bn(p, e, n, interpret)
+    p_pad = _round_up(p, bn)
+    if p_pad != p:
+        models = jnp.pad(models, ((0, 0), (0, p_pad - p)))
+    out = pl.pallas_call(
+        _segment_bcast_kernel,
+        grid=(p_pad // bn,),
+        in_specs=[
+            pl.BlockSpec((n, 1), lambda i: (0, 0)),      # segment ids
+            pl.BlockSpec((e, bn), lambda i: (0, i)),     # model tile
+        ],
+        out_specs=pl.BlockSpec((n, bn), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((n, p_pad), out_dtype),
+        interpret=interpret,
+    )(segment_ids.reshape(n, 1).astype(jnp.int32), models)
+    return out[:, :p]
+
+
+def hier_agg(bank, weights, *, bn: int | None = None,
+             interpret: bool = True):
+    """Legacy single-segment API. bank: (R, N); weights: (R,). Returns
+    the weighted mean (N,) f32 — ``segment_agg`` with one segment."""
+    r = bank.shape[0]
+    return segment_agg(bank, weights, jnp.zeros((r,), jnp.int32), 1,
+                       bn=bn, interpret=interpret)[0]

@@ -3,6 +3,10 @@
 ``interpret`` defaults to True here (CPU container; the kernel body runs
 in Python for correctness validation). On a real TPU deployment set
 ``REPRO_KERNEL_INTERPRET=0`` and the same code paths compile to Mosaic.
+
+``segment_agg`` / ``segment_broadcast`` are the flat-bank hot path
+(``repro.core.flatbank`` + ``repro.core.hfl``); ``hier_agg`` is the
+legacy single-segment API kept for its callers and tests.
 """
 from __future__ import annotations
 
@@ -28,8 +32,22 @@ def flash_attention(q, k, v, *, causal=True, window=0, q_offset=0,
 
 
 @functools.partial(jax.jit, static_argnames=("bn",))
-def hier_agg(bank, weights, *, bn=2048):
+def hier_agg(bank, weights, *, bn=None):
     return _ha.hier_agg(bank, weights, bn=bn, interpret=INTERPRET)
+
+
+@functools.partial(jax.jit, static_argnames=("num_segments", "bn"))
+def segment_agg(bank, weights, segment_ids, num_segments, *, bn=None):
+    """(N, P) x (N,) weights x (N,) segment ids -> (E, P) f32 means."""
+    return _ha.segment_agg(bank, weights, segment_ids, num_segments,
+                           bn=bn, interpret=INTERPRET)
+
+
+@functools.partial(jax.jit, static_argnames=("out_dtype", "bn"))
+def segment_broadcast(models, segment_ids, *, out_dtype=None, bn=None):
+    """(E, P) x (N,) segment ids -> (N, P) bank resync (fused gather)."""
+    return _ha.segment_broadcast(models, segment_ids, out_dtype=out_dtype,
+                                 bn=bn, interpret=INTERPRET)
 
 
 @functools.partial(jax.jit, static_argnames=("chunk",))

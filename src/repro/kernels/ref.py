@@ -1,7 +1,10 @@
 """Pure-jnp oracles for every kernel (the allclose targets).
 
 These delegate to the model-layer reference implementations where they
-exist — the kernels must match what the models actually compute.
+exist — the kernels must match what the models actually compute. The
+aggregation oracles include the pre-flat-bank per-leaf tree path
+(``weighted_aggregate_ref``), kept here as the reference the flat-bank
+engine is validated against.
 """
 from __future__ import annotations
 
@@ -33,3 +36,37 @@ def hier_agg_ref(bank, weights):
     wsum = jnp.maximum(jnp.sum(weights), 1e-9)
     return jnp.einsum("r,rn->n", weights.astype(jnp.float32),
                       bank.astype(jnp.float32)) / wsum
+
+
+def segment_agg_ref(bank, weights, segment_ids, num_segments: int):
+    """Flat-matrix oracle: (N, P) x (N,) x (N,) -> (E, P) f32 weighted
+    segment means (empty segments -> 0 via the weight-sum clamp)."""
+    w = weights.astype(jnp.float32)
+    wsum = jnp.maximum(
+        jax.ops.segment_sum(w, segment_ids, num_segments), 1e-9)
+    s = jax.ops.segment_sum(bank.astype(jnp.float32) * w[:, None],
+                            segment_ids, num_segments)
+    return s / wsum[:, None]
+
+
+def segment_broadcast_ref(models, segment_ids, out_dtype=None):
+    """(E, P) x (N,) -> (N, P): out[i] = models[segment_ids[i]]."""
+    return models[segment_ids].astype(out_dtype or models.dtype)
+
+
+def weighted_aggregate_ref(bank, weights, segment_ids, num_segments: int):
+    """The per-leaf tree path (the pre-flat-bank ``hfl`` hot loop):
+    bank leaves (N, ...) -> pytree with leading ``num_segments`` axis,
+    f32 accumulation, leaf dtypes preserved."""
+    wsum = jax.ops.segment_sum(weights, segment_ids, num_segments)
+    wsum = jnp.maximum(wsum, 1e-9)
+
+    def agg(leaf):
+        w = weights.reshape((-1,) + (1,) * (leaf.ndim - 1)).astype(
+            jnp.float32)
+        s = jax.ops.segment_sum(leaf.astype(jnp.float32) * w, segment_ids,
+                                num_segments)
+        return (s / wsum.reshape((-1,) + (1,) * (leaf.ndim - 1))).astype(
+            leaf.dtype)
+
+    return jax.tree.map(agg, bank)

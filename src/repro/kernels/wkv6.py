@@ -118,7 +118,7 @@ def wkv6_chunked(r, k, v, w, u, *, chunk: int = 64,
             jax.ShapeDtypeStruct((bh, hd, hd), jnp.float32),
         ],
         scratch_shapes=[pltpu.VMEM((hd, hd), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=pltpu.TPUCompilerParams(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(rs, ks, vs, ws, us)

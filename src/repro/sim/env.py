@@ -112,10 +112,10 @@ class HFLEnv:
                 scheme=cfg.data_scheme, seed=cfg.seed,
                 alpha=cfg.dirichlet_alpha)
             loss_fn = lambda p, b: model_mod.cnn_loss(self._apply_fn, p, b)
-            self._cloud_round = jax.jit(
-                hfl.make_cloud_round(loss_fn, cfg.lr, cfg.batch_size,
-                                     cfg.n_edges, cfg.gamma_max,
-                                     cfg.gamma_max))
+            # already jit-compiled; donates the bank buffer per round
+            self._cloud_round = hfl.make_cloud_round(
+                loss_fn, cfg.lr, cfg.batch_size, cfg.n_edges,
+                cfg.gamma_max, cfg.gamma_max)
             self._acc_fn = jax.jit(
                 lambda p, x, y: model_mod.cnn_accuracy(
                     self._apply_fn, p, {"x": x, "y": y}))

@@ -1,0 +1,37 @@
+"""Import-or-stub shim for ``hypothesis``.
+
+When the package is installed, re-exports the real ``given`` /
+``settings`` / ``strategies``. When it is missing (slim CI containers),
+exports stand-ins that mark each property test as skipped at collection
+time — the rest of the suite still runs instead of erroring on import.
+"""
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    import pytest
+
+    HAVE_HYPOTHESIS = False
+
+    class _AnyStrategy:
+        """Accepts any ``st.<name>(...)`` call made at decoration time."""
+
+        def __getattr__(self, name):
+            return lambda *a, **k: None
+
+    st = _AnyStrategy()
+
+    def settings(*args, **kwargs):
+        return lambda f: f
+
+    def given(*args, **kwargs):
+        def deco(f):
+            @pytest.mark.skip(reason="hypothesis not installed")
+            def stub():
+                pass
+
+            stub.__name__ = f.__name__
+            stub.__doc__ = f.__doc__
+            return stub
+
+        return deco

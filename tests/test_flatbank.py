@@ -1,0 +1,207 @@
+"""Flat-bank engine coverage: ravel/unravel round-trips and parity of
+the fused segment kernels against the per-leaf tree-path oracle
+(``ref.weighted_aggregate_ref``) on nested pytrees with mixed dtypes,
+uneven edge populations, empty segments, and non-tile-aligned P."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import flatbank, hfl
+from repro.kernels import ops, ref
+
+
+def _mixed_bank(rng, n):
+    """Nested pytree, f32 + bf16 leaves, P = 30+74+35+1 = 140 (not a
+    multiple of 128)."""
+    return {
+        "conv": {"w": jnp.asarray(rng.normal(size=(n, 2, 3, 5)),
+                                  jnp.float32),
+                 "b": jnp.asarray(rng.normal(size=(n, 74)), jnp.bfloat16)},
+        "head": [jnp.asarray(rng.normal(size=(n, 5, 7)), jnp.bfloat16),
+                 jnp.asarray(rng.normal(size=(n,)), jnp.float32)],
+    }
+
+
+def _assert_tree_close(got, want, f32_tol=1e-5, bf16_tol=2e-2):
+    for g, w in zip(jax.tree.leaves(got), jax.tree.leaves(want)):
+        assert g.dtype == w.dtype
+        assert g.shape == w.shape
+        tol = bf16_tol if g.dtype == jnp.bfloat16 else f32_tol
+        np.testing.assert_allclose(np.asarray(g, np.float32),
+                                   np.asarray(w, np.float32),
+                                   atol=tol, rtol=tol)
+
+
+# ---------------------------------------------------------------------------
+# ravel / unravel
+# ---------------------------------------------------------------------------
+
+def test_flatten_roundtrip_mixed_dtypes():
+    rng = np.random.default_rng(0)
+    bank = _mixed_bank(rng, 7)
+    spec = flatbank.bank_spec(bank)
+    assert spec.width == 140
+    assert spec.dtype == jnp.dtype(jnp.float32)   # mixed -> f32 promote
+    mat = spec.flatten(bank)
+    assert mat.shape == (7, 140)
+    _assert_tree_close(spec.unflatten(mat), bank, f32_tol=0.0,
+                       bf16_tol=0.0)              # round-trip is exact
+
+
+def test_flatten_uniform_dtype_is_preserved():
+    rng = np.random.default_rng(1)
+    bank = {"a": jnp.asarray(rng.normal(size=(4, 9)), jnp.bfloat16),
+            "b": jnp.asarray(rng.normal(size=(4, 3, 2)), jnp.bfloat16)}
+    spec = flatbank.bank_spec(bank)
+    assert spec.dtype == jnp.dtype(jnp.bfloat16)  # bf16 bank stays bf16
+    assert spec.flatten(bank).dtype == jnp.bfloat16
+
+
+def test_model_vector_roundtrip():
+    rng = np.random.default_rng(2)
+    bank = _mixed_bank(rng, 3)
+    spec = flatbank.bank_spec(bank)
+    model = hfl.bank_select(bank, 1)
+    vec = spec.flatten_model(model)
+    assert vec.shape == (spec.width,)
+    _assert_tree_close(spec.unflatten_model(vec), model, f32_tol=0.0,
+                       bf16_tol=0.0)
+
+
+def test_spec_is_cached():
+    rng = np.random.default_rng(3)
+    bank = _mixed_bank(rng, 5)
+    assert flatbank.bank_spec(bank) is flatbank.bank_spec(
+        jax.tree.map(lambda a: a + 1, bank))
+
+
+# ---------------------------------------------------------------------------
+# flat path vs tree-path oracle
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n,m,seed", [(11, 4, 0), (6, 6, 1), (16, 2, 2)])
+def test_weighted_aggregate_matches_tree_oracle(n, m, seed):
+    """Uneven edge populations (random assignment leaves some segments
+    thin or empty) on a mixed-dtype nested bank."""
+    rng = np.random.default_rng(seed)
+    bank = _mixed_bank(rng, n)
+    w = jnp.asarray(rng.uniform(0.1, 3.0, size=(n,)), jnp.float32)
+    seg = jnp.asarray(rng.integers(0, m, size=(n,)))
+    got = hfl.weighted_aggregate(bank, w, seg, m)
+    want = ref.weighted_aggregate_ref(bank, w, seg, m)
+    _assert_tree_close(got, want)
+
+
+def test_empty_segments_aggregate_to_zero():
+    rng = np.random.default_rng(4)
+    n, m = 8, 5
+    bank = {"w": jnp.asarray(rng.normal(size=(n, 33)), jnp.float32)}
+    w = jnp.asarray(rng.uniform(0.5, 2.0, size=(n,)), jnp.float32)
+    seg = jnp.zeros((n,), jnp.int32)              # segments 1..4 empty
+    out = hfl.weighted_aggregate(bank, w, seg, m)["w"]
+    want = ref.weighted_aggregate_ref(
+        {"w": bank["w"]}, w, seg, m)["w"]
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               atol=1e-5)
+    assert np.abs(np.asarray(out[1:])).max() == 0.0
+
+
+def test_cloud_and_edge_aggregate_compose():
+    """Edge agg then cloud agg == direct global mean on the flat path
+    (the identity the HFL env relies on), mixed dtypes included."""
+    rng = np.random.default_rng(5)
+    n, m = 12, 3
+    bank = _mixed_bank(rng, n)
+    sizes = jnp.asarray(rng.uniform(1, 3, size=(n,)), jnp.float32)
+    seg = jnp.asarray(rng.integers(0, m, size=(n,)))
+    edge = hfl.edge_aggregate(bank, sizes, seg, m)
+    esz = jax.ops.segment_sum(sizes, seg, m)
+    cloud = hfl.cloud_aggregate(edge, esz)
+    direct = hfl.bank_select(
+        hfl.weighted_aggregate(bank, sizes, jnp.zeros((n,), jnp.int32), 1),
+        0)
+    _assert_tree_close(cloud, direct, f32_tol=1e-5, bf16_tol=4e-2)
+
+
+# ---------------------------------------------------------------------------
+# kernel-level sweeps (multi-tile grids, non-aligned P)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n,p,e,bn", [
+    (9, 997, 4, 128),        # non-aligned P, multi-tile grid
+    (50, 21840, 5, 2048),    # MNIST-CNN bank shape
+    (3, 130, 1, 128),        # single segment, 2 tiles
+    (16, 4096, 8, None),     # auto tile
+])
+def test_segment_agg_kernel_sweep(n, p, e, bn):
+    rng = np.random.default_rng(6)
+    mat = jnp.asarray(rng.normal(size=(n, p)), jnp.float32)
+    w = jnp.asarray(rng.uniform(0.1, 3.0, size=(n,)), jnp.float32)
+    seg = jnp.asarray(rng.integers(0, e, size=(n,)), jnp.int32)
+    out = ops.segment_agg(mat, w, seg, e, bn=bn)
+    want = ref.segment_agg_ref(mat, w, seg, e)
+    assert out.shape == (e, p)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               atol=1e-5, rtol=1e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("bn", [128, None])
+def test_segment_broadcast_kernel(dtype, bn):
+    rng = np.random.default_rng(7)
+    e, p, n = 4, 997, 13
+    models = jnp.asarray(rng.normal(size=(e, p)), jnp.float32)
+    seg = jnp.asarray(rng.integers(0, e, size=(n,)), jnp.int32)
+    out = ops.segment_broadcast(models, seg, out_dtype=dtype, bn=bn)
+    assert out.shape == (n, p) and out.dtype == dtype
+    np.testing.assert_array_equal(
+        np.asarray(out),
+        np.asarray(ref.segment_broadcast_ref(models, seg, dtype)))
+
+
+def test_segment_agg_bf16_bank():
+    rng = np.random.default_rng(8)
+    n, p, e = 10, 513, 3
+    mat = jnp.asarray(rng.normal(size=(n, p)), jnp.bfloat16)
+    w = jnp.asarray(rng.uniform(0.5, 2.0, size=(n,)), jnp.float32)
+    seg = jnp.asarray(rng.integers(0, e, size=(n,)), jnp.int32)
+    out = ops.segment_agg(mat, w, seg, e)
+    want = ref.segment_agg_ref(mat, w, seg, e)
+    assert out.dtype == jnp.float32                # f32 accumulate out
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               atol=2e-2, rtol=2e-2)
+
+
+# ---------------------------------------------------------------------------
+# round-level: fedavg on the flat path
+# ---------------------------------------------------------------------------
+
+def test_fedavg_round_syncs_to_participating_mean():
+    """With γ1 = 0 (no local SGD) the round must reduce to the weighted
+    mean of the participating devices, and resync the whole bank."""
+    rng = np.random.default_rng(9)
+    n = 6
+    bank = {"w": jnp.asarray(rng.normal(size=(n, 4, 2)), jnp.float32),
+            "b": jnp.asarray(rng.normal(size=(n, 3)), jnp.float32)}
+    x = jnp.asarray(rng.normal(size=(n, 8, 4)), jnp.float32)
+    y = jnp.asarray(rng.integers(0, 2, size=(n, 8)))
+    sizes = jnp.asarray(rng.uniform(1, 3, size=(n,)), jnp.float32)
+    part = jnp.asarray([True, False, True, True, False, True])
+
+    def loss(p, batch):
+        return jnp.mean((batch["x"] @ p["w"][..., 0]) ** 2)
+
+    round_ = hfl.make_fedavg_round(loss, 0.1, 4, max_g1=2)
+    # the round donates the bank buffer — compute the expectation first
+    w_eff = sizes * part.astype(jnp.float32)
+    want = ref.weighted_aggregate_ref(bank, w_eff,
+                                      jnp.zeros((n,), jnp.int32), 1)
+    new_bank, glob = round_(bank, x, y, sizes, part,
+                            jnp.zeros((), jnp.int32),
+                            jax.random.PRNGKey(0))
+    _assert_tree_close(glob, hfl.bank_select(want, 0))
+    for leaf in jax.tree.leaves(new_bank):
+        np.testing.assert_allclose(np.asarray(leaf),
+                                   np.asarray(leaf[:1]).repeat(n, 0),
+                                   atol=0)

@@ -1,10 +1,11 @@
 """HFL aggregation math + Arena components: unit tests and hypothesis
-property tests on the system invariants."""
+property tests on the system invariants. Property tests skip cleanly
+when ``hypothesis`` is not installed (see ``_hypothesis_compat``)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import convergence, hfl, pca, profiling
 from repro.core.reward import UPSILON, reward
@@ -77,7 +78,7 @@ def test_cloud_round_synchronizes_bank():
         lp = jax.nn.log_softmax(logits)
         return -jnp.mean(jnp.take_along_axis(lp, batch["y"][:, None], 1))
 
-    round_ = jax.jit(hfl.make_cloud_round(loss, 0.1, 4, m, 3, 3))
+    round_ = hfl.make_cloud_round(loss, 0.1, 4, m, 3, 3)  # self-jitting
     p0 = {"w": jnp.asarray(rng.normal(size=(4, 2)), jnp.float32)}
     bank = hfl.init_bank(lambda k: p0, jax.random.PRNGKey(0), n)
     sizes = jnp.ones((n,), jnp.float32)
