@@ -1,7 +1,44 @@
 #!/usr/bin/env bash
-# One reproducible verify entry point: the tier-1 test command from
-# ROADMAP.md. Extra pytest args pass through (e.g. scripts/ci.sh -k flat).
+# Tiered CI entry point — the same subcommands run locally and in
+# .github/workflows/ci.yml, so a green laptop run means a green CI run.
+#
+#   scripts/ci.sh lint           stdlib lint tier (scripts/lint.py)
+#   scripts/ci.sh test [args]    tier-1 pytest on one CPU device
+#                                (pallas interpret mode; the ROADMAP
+#                                verify command)
+#   scripts/ci.sh test-sharded   sharded-parity tier: the mesh tests
+#                                under 8 forced host devices
+#   scripts/ci.sh bench          kernels_bench + regression gate vs the
+#                                committed BENCH_kernels.json (>20%
+#                                kernel/oracle regression fails;
+#                                passing runs append new rows)
+#
+# Backward compatible: no subcommand (or pytest-style args such as
+# `scripts/ci.sh -k flat`) runs the tier-1 suite.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
-exec python -m pytest -x -q "$@"
+export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
+
+cmd="${1:-test}"
+# consume the subcommand word only if one was actually given
+case "${1:-}" in lint|test|test-sharded|bench) shift ;; esac
+case "$cmd" in
+  lint)
+    python scripts/lint.py
+    ;;
+  test)
+    python -m pytest -x -q "$@"
+    ;;
+  test-sharded)
+    XLA_FLAGS="--xla_force_host_platform_device_count=8" \
+      python -m pytest -x -q tests/test_sharded_bank.py "$@"
+    ;;
+  bench)
+    python scripts/bench_gate.py
+    ;;
+  *)
+    # legacy behavior: everything is pytest args for the tier-1 suite
+    python -m pytest -x -q "$@"
+    ;;
+esac

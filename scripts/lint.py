@@ -1,0 +1,67 @@
+#!/usr/bin/env python
+"""Dependency-free lint tier (scripts/ci.sh lint).
+
+The CI container ships no third-party linters and the pipeline must not
+install anything, so this is a small stdlib checker over the tracked
+Python sources:
+
+* the file parses (``ast.parse`` — catches syntax errors before the
+  test tier spends minutes importing jax);
+* no tab indentation, no trailing whitespace, no CRLF line endings;
+* lines at most 99 characters (the repo style is ~79; 99 is the hard
+  ceiling so URLs and test fixtures fit).
+"""
+from __future__ import annotations
+
+import ast
+import os
+import subprocess
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+MAX_LINE = 99
+
+
+def python_files() -> list:
+    out = subprocess.run(["git", "ls-files", "*.py"], cwd=REPO,
+                         capture_output=True, text=True, check=True)
+    return [os.path.join(REPO, p) for p in out.stdout.split()]
+
+
+def check_file(path: str) -> list:
+    rel = os.path.relpath(path, REPO)
+    problems = []
+    with open(path, "rb") as f:
+        raw = f.read()
+    if b"\r\n" in raw:
+        problems.append(f"{rel}: CRLF line endings")
+    text = raw.decode("utf-8")
+    try:
+        ast.parse(text, filename=rel)
+    except SyntaxError as e:
+        problems.append(f"{rel}:{e.lineno}: syntax error: {e.msg}")
+        return problems
+    for i, line in enumerate(text.split("\n"), 1):
+        if line != line.rstrip():
+            problems.append(f"{rel}:{i}: trailing whitespace")
+        if "\t" in line:
+            problems.append(f"{rel}:{i}: tab character")
+        if len(line) > MAX_LINE:
+            problems.append(f"{rel}:{i}: line too long "
+                            f"({len(line)} > {MAX_LINE})")
+    return problems
+
+
+def main() -> int:
+    files = python_files()
+    problems = []
+    for path in files:
+        problems.extend(check_file(path))
+    for p in problems:
+        print(p)
+    print(f"lint: {len(files)} files, {len(problems)} problem(s)")
+    return 1 if problems else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -23,6 +23,39 @@ see ``repro.core.hfl.weighted_aggregate`` for the wiring.
 
 Specs are cached on (treedef, shapes, dtypes) so repeated flattening —
 e.g. inside a scanned cloud round — re-derives nothing.
+
+Sharding layout (multi-host banks)
+----------------------------------
+A single chip caps the bank at one HBM's worth of ``N x P``; past that
+the *device axis* N is partitioned across the HFL mesh.
+``ShardedBankSpec`` pairs a ``BankSpec`` with a mesh and fixes the
+layout:
+
+* the ``(N, P)`` bank is placed with ``NamedSharding`` over **all** the
+  mesh's axes on axis 0 — for the bank mesh from
+  ``repro.launch.mesh.make_bank_mesh`` that is the ("edge", "fl")
+  replica plane, so each edge's device rows stay local to its shard
+  (shard k of K holds rows ``[k*N/K, (k+1)*N/K)``; the shard count K
+  must divide the row count N).
+  Columns (P) are never split: every row is one whole model, and the
+  kernels tile P internally.
+* per-device vectors (weights, segment ids, data shards) shard the same
+  way on axis 0, so ``shard_map`` hands each shard exactly its rows.
+* edge models ``(E, P)`` and the global model stay **replicated**: after
+  the ``psum`` in ``segment_agg_sharded`` every shard holds the same
+  (small) ``(E, P)`` matrix and resyncs only its local rows via a
+  shard-local ``segment_broadcast`` — the full ``(N, P)`` bank is never
+  gathered onto one device.
+
+``ShardedBankSpec`` is the *placement* side of this contract:
+``place_bank`` / ``place_rows`` / ``place_replicated`` put a bank, the
+round's row-aligned inputs (data shards, sizes, assignments), and the
+edge/global models where the layout says they live, and ``pspec`` /
+``tree_pspecs`` expose the matching PartitionSpecs for callers building
+their own ``shard_map``/jit shardings. ``repro.core.hfl`` compiles the
+rounds against the same layout (rows over all mesh axes, first output
+row-sharded, models replicated); ``repro.sim.env`` places its bank and
+federated data through these helpers when a mesh is configured.
 """
 from __future__ import annotations
 
@@ -75,6 +108,82 @@ class BankSpec:
             for o, s, shp, dt in zip(self.offsets, self.sizes,
                                      self.shapes, self.dtypes)]
         return jax.tree_util.tree_unflatten(self.treedef, leaves)
+
+
+def local_rows(n: int, mesh) -> int:
+    """Rows per shard for ``n`` bank rows on ``mesh`` — the single
+    definition of the rows-divide-shards contract (used by the
+    placement helpers here and the round dispatchers in
+    ``repro.core.hfl``)."""
+    k = int(mesh.size)
+    if n % k:
+        raise ValueError(
+            f"bank rows N={n} must be divisible by the {k}-shard mesh "
+            f"{dict(mesh.shape)}")
+    return n // k
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardedBankSpec:
+    """A ``BankSpec`` + mesh: the placement recipe for a row-sharded
+    bank. Rows shard over *all* the mesh's axes (axis 0); columns are
+    never split. See the module docstring for the layout contract."""
+    spec: BankSpec
+    mesh: Any                       # jax.sharding.Mesh
+
+    @property
+    def axes(self) -> tuple:
+        return tuple(self.mesh.axis_names)
+
+    @property
+    def n_shards(self) -> int:
+        return int(np.prod([self.mesh.shape[a] for a in self.axes]))
+
+    def local_rows(self, n: int) -> int:
+        return local_rows(n, self.mesh)
+
+    # -- PartitionSpecs ---------------------------------------------------
+    def pspec(self, ndim: int, sharded: bool = True):
+        """Spec for one array: axis 0 over the mesh axes (or replicated
+        when ``sharded=False``), trailing axes unsharded."""
+        from jax.sharding import PartitionSpec as P
+        lead = self.axes if sharded else None
+        return P(lead, *([None] * (ndim - 1)))
+
+    def tree_pspecs(self, tree, sharded: bool = True):
+        """Per-leaf ``pspec`` pytree (shard_map in/out_specs for a bank
+        or any row-aligned pytree)."""
+        return jax.tree.map(lambda a: self.pspec(jnp.ndim(a), sharded),
+                            tree)
+
+    # -- placement --------------------------------------------------------
+    def _sharding(self, ndim: int, sharded: bool = True):
+        from jax.sharding import NamedSharding
+        return NamedSharding(self.mesh, self.pspec(ndim, sharded))
+
+    def place_bank(self, bank):
+        """device_put every (N, ...) leaf with its rows sharded."""
+        rows = jax.tree.leaves(bank)[0].shape[0]
+        self.local_rows(rows)
+        return jax.tree.map(
+            lambda a: jax.device_put(a, self._sharding(a.ndim)), bank)
+
+    def place_rows(self, arr):
+        """device_put one row-aligned array ((N,), (N, P), (N, ...))."""
+        self.local_rows(arr.shape[0])
+        return jax.device_put(arr, self._sharding(arr.ndim))
+
+    def place_replicated(self, tree):
+        """device_put a pytree fully replicated over the mesh."""
+        return jax.tree.map(
+            lambda a: jax.device_put(
+                a, self._sharding(jnp.ndim(a), sharded=False)), tree)
+
+
+def sharded_bank_spec(bank, mesh) -> ShardedBankSpec:
+    """``ShardedBankSpec`` for a bank pytree on ``mesh`` (cached via the
+    underlying ``bank_spec``)."""
+    return ShardedBankSpec(spec=bank_spec(bank), mesh=mesh)
 
 
 _SPEC_CACHE: dict = {}

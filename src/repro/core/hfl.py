@@ -20,14 +20,30 @@ upper-bound loops (``max_g1``/``max_g2`` static). ``make_cloud_round``
 and ``make_fedavg_round`` return jit-compiled rounds that donate the
 incoming bank buffer, so steady-state training re-uses the bank
 allocation instead of copying it every round.
+
+Multi-host banks: every aggregation entry point and round factory takes
+an optional ``mesh``. With a mesh the bank's device axis is sharded over
+all the mesh's axes (layout contract: ``flatbank.ShardedBankSpec``). The
+round body is the *same program* compiled under GSPMD with row-sharded
+in/out shardings — device-local training partitions trivially on the row
+axis (and so keeps exact RNG parity with the single-chip path) — while
+the Pallas launches, which GSPMD cannot partition, are wrapped in
+``shard_map``: each shard runs ``segment_agg`` on its local rows and the
+partial edge sums meet in an axis-scoped ``psum``
+(``segment_agg_sharded``); the edge->device resync is a shard-local
+``segment_broadcast`` of the replicated edge matrix, so the full (N, P)
+bank never materializes on one device. Without a mesh the single-chip
+path is unchanged.
 """
 from __future__ import annotations
 
 import functools
-from typing import Any, Callable
+from typing import Callable
 
 import jax
 import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
 
 from repro.core import flatbank
 from repro.kernels import ops
@@ -53,10 +69,69 @@ def bank_select(bank, i: int):
 
 
 # ---------------------------------------------------------------------------
-# aggregation (Eqs. 1 and 2) — flat-bank path
+# aggregation (Eqs. 1 and 2) — flat-bank path (single-chip or sharded)
 # ---------------------------------------------------------------------------
 
-def weighted_aggregate(bank, weights, segment_ids, num_segments: int):
+def _mesh_axes(mesh) -> tuple:
+    return tuple(mesh.axis_names)
+
+
+def _check_rows(n: int, mesh) -> None:
+    flatbank.local_rows(n, mesh)     # one shared divisibility contract
+
+
+@functools.lru_cache(maxsize=None)
+def _smap_segment_agg(mesh, num_segments: int):
+    """shard_map of the sharded segment_agg for one mesh: rows of
+    (bank, weights, segment_ids) sharded over all mesh axes, (E, P)
+    output replicated (post-psum). Composable inside a larger jit."""
+    axes = _mesh_axes(mesh)
+    row, rep = P(axes), P()
+    return shard_map(
+        lambda m, w, s: ops.segment_agg_sharded(m, w, s, num_segments,
+                                                axes),
+        mesh=mesh, in_specs=(row, row, row), out_specs=rep,
+        check_rep=False)
+
+
+@functools.lru_cache(maxsize=None)
+def _smap_segment_agg_rep(mesh, num_segments: int):
+    """shard_map of the plain segment_agg on fully replicated inputs —
+    the (E, P)-level aggregations are tiny, every shard just computes
+    them identically (keeps the Pallas launch out of GSPMD's hands)."""
+    rep = P()
+    return shard_map(
+        lambda m, w, s: ops.segment_agg(m, w, s, num_segments),
+        mesh=mesh, in_specs=(rep, rep, rep), out_specs=rep,
+        check_rep=False)
+
+
+@functools.lru_cache(maxsize=None)
+def _smap_segment_broadcast(mesh, out_dtype):
+    """shard_map of the shard-local bank resync: replicated (E, P) edge
+    models x row-sharded segment ids -> row-sharded (N, P) bank. Each
+    shard gathers only its own rows — no full-bank broadcast."""
+    axes = _mesh_axes(mesh)
+    row, rep = P(axes), P()
+    return shard_map(
+        lambda m, s: ops.segment_broadcast(m, s, out_dtype=out_dtype),
+        mesh=mesh, in_specs=(rep, row), out_specs=row, check_rep=False)
+
+
+@functools.lru_cache(maxsize=None)
+def _sharded_segment_agg(mesh, num_segments: int):
+    """jit'd standalone entry point (weighted_aggregate's mesh path).
+    Explicit in_shardings commit host arrays to the row layout before
+    the shard_map runs."""
+    from jax.sharding import NamedSharding
+    row = NamedSharding(mesh, P(_mesh_axes(mesh)))
+    rep = NamedSharding(mesh, P())
+    return jax.jit(_smap_segment_agg(mesh, num_segments),
+                   in_shardings=(row, row, row), out_shardings=rep)
+
+
+def weighted_aggregate(bank, weights, segment_ids, num_segments: int,
+                       mesh=None):
     """Generic dataset-size-weighted aggregation on the flat bank.
 
     bank leaves: (N, ...); weights: (N,) |D_i|; segment_ids: (N,) edge of
@@ -64,25 +139,40 @@ def weighted_aggregate(bank, weights, segment_ids, num_segments: int):
         out_j = sum_{i in j} w_i x_i / sum_{i in j} w_i          (Eq. 1)
 
     One ``segment_agg`` kernel launch over the flattened ``(N, P)``
-    bank; leaf dtypes are restored on unflatten.
+    bank; leaf dtypes are restored on unflatten. With ``mesh`` the rows
+    shard over the mesh and each shard launches on its local rows only
+    (partial sums combined by ``psum``); the result is replicated.
     """
     spec = flatbank.bank_spec(bank)
-    out = ops.segment_agg(spec.flatten(bank), weights, segment_ids,
-                          num_segments)
+    mat = spec.flatten(bank)
+    if mesh is None:
+        out = ops.segment_agg(mat, weights, segment_ids, num_segments)
+    else:
+        _check_rows(mat.shape[0], mesh)
+        out = _sharded_segment_agg(mesh, int(num_segments))(
+            mat, weights, segment_ids)
     return spec.unflatten(out)
 
 
-def edge_aggregate(bank, device_sizes, edge_assign, n_edges: int):
+def edge_aggregate(bank, device_sizes, edge_assign, n_edges: int,
+                   mesh=None):
     """Eq. 1: w_j^e = Σ_i |D_i| w_i / Σ_i |D_i| over the devices of edge j."""
-    return weighted_aggregate(bank, device_sizes, edge_assign, n_edges)
+    return weighted_aggregate(bank, device_sizes, edge_assign, n_edges,
+                              mesh=mesh)
 
 
-def cloud_aggregate(edge_models, edge_sizes):
-    """Eq. 2: w = Σ_j |D_j| w_j^e / Σ_j |D_j| (single segment)."""
+def cloud_aggregate(edge_models, edge_sizes, mesh=None):
+    """Eq. 2: w = Σ_j |D_j| w_j^e / Σ_j |D_j| (single segment). The edge
+    matrix is small; it only shards when n_edges divides the mesh."""
     n = edge_sizes.shape[0]
     spec = flatbank.bank_spec(edge_models)
-    out = ops.segment_agg(spec.flatten(edge_models), edge_sizes,
-                          jnp.zeros((n,), jnp.int32), 1)
+    seg = jnp.zeros((n,), jnp.int32)
+    if mesh is not None and n % int(mesh.size) == 0:
+        out = _sharded_segment_agg(mesh, 1)(
+            spec.flatten(edge_models), edge_sizes, seg)
+    else:
+        out = ops.segment_agg(spec.flatten(edge_models), edge_sizes,
+                              seg, 1)
     return spec.unflatten_model(out[0])
 
 
@@ -98,6 +188,11 @@ def make_local_trainer(loss_fn: Callable, lr: float, batch_size: int):
     epochs of local SGD between edge aggregations).
     gamma1_dev: (N,) traced per-device epoch counts; epochs beyond a
     device's γ1 are masked no-ops (static bound ``max_g1``).
+
+    The same function serves sharded rounds: under GSPMD with bank/x/y
+    row-sharded, the vmapped epoch partitions on the device axis and the
+    (replicated) key chain is identical to the single-chip program — so
+    sharded training is bit-compatible with one-chip training.
     """
 
     def device_epoch(params, x, y, perm):
@@ -144,8 +239,42 @@ def make_local_trainer(loss_fn: Callable, lr: float, batch_size: int):
 # one cloud round (Eq. 5 composition)
 # ---------------------------------------------------------------------------
 
+def _jit_round(fn, mesh, n_row_args: int, donate: tuple):
+    """jit a round function. Single chip: plain jit with donation. With
+    a mesh: the first ``n_row_args`` arguments are row-sharded over all
+    mesh axes (bank, data shards, per-device vectors), the rest
+    replicated; the first output (the bank) is constrained to stay
+    row-sharded, the rest (global/edge models) replicated. A thin
+    wrapper validates row-count divisibility before dispatch."""
+    if mesh is None:
+        return jax.jit(fn, donate_argnums=donate)
+    from jax.sharding import NamedSharding
+    row = NamedSharding(mesh, P(_mesh_axes(mesh)))
+    rep = NamedSharding(mesh, P())
+
+    def constrained(*args):
+        out = fn(*args)
+        bank = jax.tree.map(
+            lambda a: jax.lax.with_sharding_constraint(a, row), out[0])
+        rest = jax.tree.map(
+            lambda a: jax.lax.with_sharding_constraint(a, rep), out[1:])
+        return (bank,) + rest
+
+    state = {}
+
+    def call(*args):
+        _check_rows(jax.tree.leaves(args[0])[0].shape[0], mesh)
+        if "jitted" not in state:
+            in_sh = (row,) * n_row_args + (rep,) * (len(args) - n_row_args)
+            state["jitted"] = jax.jit(constrained, in_shardings=in_sh,
+                                      donate_argnums=donate)
+        return state["jitted"](*args)
+
+    return call
+
+
 def make_cloud_round(loss_fn: Callable, lr: float, batch_size: int,
-                     n_edges: int, max_g1: int, max_g2: int):
+                     n_edges: int, max_g1: int, max_g2: int, mesh=None):
     """Builds a jit-compiled ``cloud_round`` (bank buffer donated):
 
     cloud_round(bank, x, y, sizes, edge_assign, g1 (M,), g2 (M,), key)
@@ -160,6 +289,16 @@ def make_cloud_round(loss_fn: Callable, lr: float, batch_size: int,
     ``segment_agg`` launch, masks frozen edges with a single 2-D
     ``where``, and resyncs the bank through ``segment_broadcast`` — no
     per-leaf tree traffic inside the scan.
+
+    With ``mesh`` the same body compiles under GSPMD with bank rows,
+    data shards, sizes, and edge assignment partitioned over the mesh
+    axes: training partitions trivially (identical key material to the
+    single-chip program), the edge aggregation runs as per-shard
+    ``segment_agg`` launches whose partial sums meet in a ``psum``
+    (``shard_map``-wrapped), and the resync ``segment_broadcast`` is
+    shard-local — the full (N, P) bank never lands on one device. The
+    returned global/edge models are replicated; the returned bank stays
+    row-sharded.
     """
     local_train = make_local_trainer(loss_fn, lr, batch_size)
 
@@ -168,33 +307,45 @@ def make_cloud_round(loss_fn: Callable, lr: float, batch_size: int,
         g1_dev = g1[edge_assign]
         g2_dev = g2[edge_assign]
 
+        if mesh is None:
+            agg = lambda mat: ops.segment_agg(mat, sizes, edge_assign,
+                                              n_edges)
+            agg1 = lambda em, w: ops.segment_agg(
+                em, w, jnp.zeros((n_edges,), jnp.int32), 1)
+            resync = lambda em: ops.segment_broadcast(
+                em, edge_assign, out_dtype=spec.dtype)
+        else:
+            agg = lambda mat: _smap_segment_agg(mesh, n_edges)(
+                mat, sizes, edge_assign)
+            agg1 = lambda em, w: _smap_segment_agg_rep(mesh, 1)(
+                em, w, jnp.zeros((n_edges,), jnp.int32))
+            resync = lambda em: _smap_segment_broadcast(mesh, spec.dtype)(
+                em, edge_assign)
+
         def t2_step(carry, t2):
             bank, edge_mat, key = carry
             key, sub = jax.random.split(key)
             active_dev = t2 < g2_dev
             g1_eff = jnp.where(active_dev, g1_dev, 0)
             bank = local_train(bank, x, y, g1_eff, max_g1, sub)
-            agg = ops.segment_agg(spec.flatten(bank), sizes, edge_assign,
-                                  n_edges)
+            a = agg(spec.flatten(bank))
             active_edge = (t2 < g2).reshape(-1, 1)
-            edge_mat = jnp.where(active_edge, agg, edge_mat)
-            # devices resume from their edge's current model
-            bank = spec.unflatten(ops.segment_broadcast(
-                edge_mat, edge_assign, out_dtype=spec.dtype))
+            edge_mat = jnp.where(active_edge, a, edge_mat)
+            # devices resume from their edge's current model (each shard
+            # gathers only its own rows under the mesh path)
+            bank = spec.unflatten(resync(edge_mat))
             return (bank, edge_mat, key), None
 
-        edge_mat0 = ops.segment_agg(spec.flatten(bank), sizes, edge_assign,
-                                    n_edges)
+        edge_mat0 = agg(spec.flatten(bank))
         (bank, edge_mat, _), _ = jax.lax.scan(
             t2_step, (bank, edge_mat0, key), jnp.arange(max_g2))
         edge_sizes = jax.ops.segment_sum(sizes, edge_assign, n_edges)
-        glob = ops.segment_agg(edge_mat, edge_sizes,
-                               jnp.zeros((n_edges,), jnp.int32), 1)[0]
+        glob = agg1(edge_mat, edge_sizes)[0]
         global_model = spec.unflatten_model(glob)
         bank = broadcast_model(global_model, x.shape[0])
         return bank, global_model, spec.unflatten(edge_mat)
 
-    return jax.jit(cloud_round, donate_argnums=(0,))
+    return _jit_round(cloud_round, mesh, n_row_args=5, donate=(0,))
 
 
 # ---------------------------------------------------------------------------
@@ -202,10 +353,13 @@ def make_cloud_round(loss_fn: Callable, lr: float, batch_size: int,
 # ---------------------------------------------------------------------------
 
 def make_fedavg_round(loss_fn: Callable, lr: float, batch_size: int,
-                      max_g1: int):
+                      max_g1: int, mesh=None):
     """FedAvg with random participation: selected devices run γ1 local
     epochs, the cloud aggregates them directly (γ2 ≡ 1). Jit-compiled,
-    bank donated; the single-segment aggregation runs on the flat bank."""
+    bank donated; the single-segment aggregation runs on the flat bank.
+    With ``mesh`` the round compiles under GSPMD like
+    ``make_cloud_round`` (row-sharded bank and data, per-shard kernel +
+    psum aggregation, replicated global model)."""
     local_train = make_local_trainer(loss_fn, lr, batch_size)
 
     def round_(bank, x, y, sizes, participate, g1, key):
@@ -214,10 +368,14 @@ def make_fedavg_round(loss_fn: Callable, lr: float, batch_size: int,
         g1_dev = jnp.where(participate, g1, 0)
         bank = local_train(bank, x, y, g1_dev, max_g1, key)
         w = sizes * participate.astype(sizes.dtype)
-        glob = ops.segment_agg(spec.flatten(bank), w,
-                               jnp.zeros((n,), jnp.int32), 1)[0]
+        seg = jnp.zeros((n,), jnp.int32)
+        if mesh is None:
+            glob = ops.segment_agg(spec.flatten(bank), w, seg, 1)[0]
+        else:
+            glob = _smap_segment_agg(mesh, 1)(spec.flatten(bank), w,
+                                              seg)[0]
         global_model = spec.unflatten_model(glob)
         bank = broadcast_model(global_model, n)
         return bank, global_model
 
-    return jax.jit(round_, donate_argnums=(0,))
+    return _jit_round(round_, mesh, n_row_args=5, donate=(0,))

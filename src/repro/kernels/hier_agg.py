@@ -30,6 +30,28 @@ hot-path operations in one launch each:
 ``hier_agg`` (legacy API) is the single-segment special case,
 ``segment_agg(..., num_segments=1)[0]``.
 
+Sharded (multi-host) variants — used under ``jax.shard_map`` when the
+bank's device axis N is partitioned across a mesh (see
+``repro.core.flatbank.ShardedBankSpec``):
+
+``segment_sum_partial``
+    The per-shard kernel: same launch as ``segment_agg`` but with the
+    in-kernel normalization disabled (unit inverse), returning the
+    *unnormalized* ``(E, P)`` weighted sums plus the local ``(E,)``
+    weight sums. Each shard reduces only its local rows.
+
+``segment_agg_sharded``
+    Call **inside** ``shard_map``: runs ``segment_sum_partial`` on the
+    shard-local rows, combines the partial edge sums and weight sums
+    with an axis-scoped ``jax.lax.psum`` over the mesh axes, and
+    normalizes. The result is replicated across shards and matches the
+    single-chip ``segment_agg`` up to f32 reduction-order error.
+
+``segment_broadcast`` needs no sharded twin: under ``shard_map`` each
+shard calls it with its local segment ids and the (replicated) edge
+matrix, resyncing only its own rows — the full-bank broadcast never
+materializes on one device.
+
 Tile sizing: ``bn=None`` picks the widest column tile that keeps the
 resident blocks within a VMEM budget (8 MiB compiled; effectively
 "all columns" in interpret mode, where each grid step pays a full
@@ -70,6 +92,34 @@ def _segment_agg_kernel(seg_ref, w_ref, inv_ref, x_ref, o_ref):
     o_ref[...] = (acc * inv_ref[...]).astype(o_ref.dtype)
 
 
+def _segment_agg_call(bank, w32, inv, segment_ids, num_segments: int,
+                      bn: int | None, interpret: bool):
+    """Shared launch: (N, P) bank x (N,) f32 weights x (E, 1) scale ->
+    (E, P) f32 ``scale * segment-weighted sums``."""
+    n, p = bank.shape
+    e = int(num_segments)
+    if bn is None:
+        bn = _auto_bn(p, n, e, interpret)
+    p_pad = _round_up(p, bn)
+    if p_pad != p:
+        bank = jnp.pad(bank, ((0, 0), (0, p_pad - p)))
+    out = pl.pallas_call(
+        _segment_agg_kernel,
+        grid=(p_pad // bn,),
+        in_specs=[
+            pl.BlockSpec((1, n), lambda i: (0, 0)),      # segment ids
+            pl.BlockSpec((1, n), lambda i: (0, 0)),      # weights
+            pl.BlockSpec((e, 1), lambda i: (0, 0)),      # per-segment scale
+            pl.BlockSpec((n, bn), lambda i: (0, i)),     # bank tile
+        ],
+        out_specs=pl.BlockSpec((e, bn), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((e, p_pad), jnp.float32),
+        interpret=interpret,
+    )(segment_ids.reshape(1, n).astype(jnp.int32),
+      w32.reshape(1, n), inv, bank)
+    return out[:, :p]
+
+
 def segment_agg(bank, weights, segment_ids, num_segments: int, *,
                 bn: int | None = None, interpret: bool = True):
     """bank: (N, P); weights: (N,); segment_ids: (N,) int. Returns the
@@ -82,31 +132,49 @@ def segment_agg(bank, weights, segment_ids, num_segments: int, *,
     computed outside and enter the kernel as an (E, 1) input so the
     normalization still happens in-kernel.
     """
-    n, p = bank.shape
     e = int(num_segments)
-    if bn is None:
-        bn = _auto_bn(p, n, e, interpret)
-    p_pad = _round_up(p, bn)
-    if p_pad != p:
-        bank = jnp.pad(bank, ((0, 0), (0, p_pad - p)))
     w32 = weights.astype(jnp.float32)
     wsum = jnp.maximum(jax.ops.segment_sum(w32, segment_ids, e), 1e-9)
     inv = (1.0 / wsum).reshape(e, 1)
-    out = pl.pallas_call(
-        _segment_agg_kernel,
-        grid=(p_pad // bn,),
-        in_specs=[
-            pl.BlockSpec((1, n), lambda i: (0, 0)),      # segment ids
-            pl.BlockSpec((1, n), lambda i: (0, 0)),      # weights
-            pl.BlockSpec((e, 1), lambda i: (0, 0)),      # 1/wsum
-            pl.BlockSpec((n, bn), lambda i: (0, i)),     # bank tile
-        ],
-        out_specs=pl.BlockSpec((e, bn), lambda i: (0, i)),
-        out_shape=jax.ShapeDtypeStruct((e, p_pad), jnp.float32),
-        interpret=interpret,
-    )(segment_ids.reshape(1, n).astype(jnp.int32),
-      w32.reshape(1, n), inv, bank)
-    return out[:, :p]
+    return _segment_agg_call(bank, w32, inv, segment_ids, e, bn, interpret)
+
+
+def segment_sum_partial(bank, weights, segment_ids, num_segments: int, *,
+                        bn: int | None = None, interpret: bool = True):
+    """Per-shard half of the sharded aggregation: the same fused launch
+    as ``segment_agg`` but *unnormalized* (unit scale). Returns
+
+        sums:  (num_segments, P) f32  — sum_{i: seg_i=j} w_i bank[i]
+        wsum:  (num_segments,)   f32  — sum_{i: seg_i=j} w_i
+
+    over the rows this shard holds. Combine across shards with ``psum``
+    and normalize (``segment_agg_sharded`` does both).
+    """
+    e = int(num_segments)
+    w32 = weights.astype(jnp.float32)
+    wsum = jax.ops.segment_sum(w32, segment_ids, e)
+    ones = jnp.ones((e, 1), jnp.float32)
+    sums = _segment_agg_call(bank, w32, ones, segment_ids, e, bn, interpret)
+    return sums, wsum
+
+
+def segment_agg_sharded(bank, weights, segment_ids, num_segments: int,
+                        axis_names, *, bn: int | None = None,
+                        interpret: bool = True):
+    """Sharded ``segment_agg`` — call inside ``shard_map`` with the bank
+    rows partitioned over ``axis_names``. Each shard reduces its local
+    ``(N_local, P)`` rows with one kernel launch; the (E, P) partial
+    edge sums and (E,) weight sums are combined with an axis-scoped
+    ``psum`` and normalized, so the returned (E, P) means are replicated
+    on every shard and equal the single-chip result up to f32
+    reduction-order error. Empty segments (globally) return zeros.
+    """
+    sums, wsum = segment_sum_partial(bank, weights, segment_ids,
+                                     num_segments, bn=bn,
+                                     interpret=interpret)
+    sums = jax.lax.psum(sums, axis_names)
+    wsum = jax.lax.psum(wsum, axis_names)
+    return sums / jnp.maximum(wsum, 1e-9)[:, None]
 
 
 def _segment_bcast_kernel(seg_ref, m_ref, o_ref):

@@ -43,6 +43,25 @@ def segment_agg(bank, weights, segment_ids, num_segments, *, bn=None):
                            bn=bn, interpret=INTERPRET)
 
 
+@functools.partial(jax.jit, static_argnames=("num_segments", "bn"))
+def segment_sum_partial(bank, weights, segment_ids, num_segments, *,
+                        bn=None):
+    """Per-shard unnormalized (E, P) sums + (E,) weight sums."""
+    return _ha.segment_sum_partial(bank, weights, segment_ids,
+                                   num_segments, bn=bn,
+                                   interpret=INTERPRET)
+
+
+def segment_agg_sharded(bank, weights, segment_ids, num_segments,
+                        axis_names, *, bn=None):
+    """Sharded segment_agg: per-shard kernel + psum over ``axis_names``.
+    Must run inside ``shard_map`` (no standalone jit wrapper — the psum
+    needs the bound mesh axes)."""
+    return _ha.segment_agg_sharded(bank, weights, segment_ids,
+                                   num_segments, axis_names, bn=bn,
+                                   interpret=INTERPRET)
+
+
 @functools.partial(jax.jit, static_argnames=("out_dtype", "bn"))
 def segment_broadcast(models, segment_ids, *, out_dtype=None, bn=None):
     """(E, P) x (N,) segment ids -> (N, P) bank resync (fused gather)."""

@@ -25,6 +25,7 @@ HFL_AXES = ("pod", "edge", "fl", "fsdp", "tp")
 REPLICA_AXES = ("pod", "edge", "fl")
 TENSOR_AXES = ("fsdp", "tp")
 SERVE_AXES = ("pod", "batch", "tp")
+BANK_AXES = ("edge", "fl")      # flat-bank row shards (replica plane)
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -58,6 +59,39 @@ def derive_serve_mesh(mesh: Mesh, tp: int) -> Mesh:
 def n_replicas(hfl_mesh: Mesh) -> tuple:
     s = hfl_mesh.shape
     return s["pod"], s["edge"], s["fl"]
+
+
+# ---------------------------------------------------------------------------
+# flat-bank mesh: the (N, P) model bank's device axis shards over the
+# ("edge", "fl") replica plane (see repro.core.flatbank.ShardedBankSpec)
+# ---------------------------------------------------------------------------
+
+def make_bank_mesh(n_edge_shards: int, fl: int = 1,
+                   devices=None) -> Mesh:
+    """A standalone ("edge", "fl") mesh for the sharded flat bank —
+    ``n_edge_shards * fl`` chips, bank rows split ``edge``-major. Used
+    directly when aggregation is the only distributed stage (no tensor
+    sharding); for full HFL runs derive it from the production mesh via
+    ``derive_bank_mesh``."""
+    devs = np.asarray(devices if devices is not None else jax.devices())
+    need = n_edge_shards * fl
+    if devs.size < need:
+        raise ValueError(
+            f"bank mesh ({n_edge_shards}, {fl}) needs {need} devices, "
+            f"have {devs.size}")
+    return Mesh(devs.reshape(-1)[:need].reshape(n_edge_shards, fl),
+                BANK_AXES)
+
+
+def derive_bank_mesh(hfl_mesh: Mesh) -> Mesh:
+    """The HFL mesh's ("edge", "fl") plane as a bank mesh: one
+    representative chip per model replica (pod 0, tensor coords (0, 0))
+    owns that replica's bank rows."""
+    devices = np.asarray(hfl_mesh.devices)   # (pod, edge, fl, fsdp, tp)
+    if tuple(hfl_mesh.axis_names) != HFL_AXES:
+        raise ValueError(f"expected an HFL mesh with axes {HFL_AXES}, "
+                         f"got {tuple(hfl_mesh.axis_names)}")
+    return Mesh(devices[0, :, :, 0, 0], BANK_AXES)
 
 
 # ---------------------------------------------------------------------------

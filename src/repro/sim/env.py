@@ -54,6 +54,9 @@ class EnvConfig:
     # re-cluster cadence (profiling module's periodic re-cluster, §3.1)
     churn_prob: float = 0.0
     recluster_every: int = 0
+    # multi-host flat bank: shard the (N, P) model bank's device axis
+    # over this mesh (e.g. launch.mesh.make_bank_mesh); None = one chip
+    mesh: Optional[object] = None
     # analytic-mode calibration
     a_max: float = 0.80
     a_rate: float = 0.016            # per-local-epoch progress rate
@@ -112,10 +115,20 @@ class HFLEnv:
                 scheme=cfg.data_scheme, seed=cfg.seed,
                 alpha=cfg.dirichlet_alpha)
             loss_fn = lambda p, b: model_mod.cnn_loss(self._apply_fn, p, b)
-            # already jit-compiled; donates the bank buffer per round
+            # already jit-compiled; donates the bank buffer per round.
+            # With cfg.mesh the round runs sharded (bank rows split over
+            # the mesh; see repro.core.flatbank.ShardedBankSpec).
             self._cloud_round = hfl.make_cloud_round(
                 loss_fn, cfg.lr, cfg.batch_size, cfg.n_edges,
-                cfg.gamma_max, cfg.gamma_max)
+                cfg.gamma_max, cfg.gamma_max, mesh=cfg.mesh)
+            if cfg.mesh is not None:
+                # pin the federated data shards to the bank layout once
+                # so no round re-ships (or replicates) the full dataset
+                from repro.core import flatbank
+                sbs = flatbank.sharded_bank_spec(
+                    {"x": self.fed.x}, cfg.mesh)
+                self.fed.x = sbs.place_rows(self.fed.x)
+                self.fed.y = sbs.place_rows(self.fed.y)
             self._acc_fn = jax.jit(
                 lambda p, x, y: model_mod.cnn_accuracy(
                     self._apply_fn, p, {"x": x, "y": y}))
@@ -150,6 +163,12 @@ class HFLEnv:
         key = jax.random.PRNGKey(cfg.seed + 1000)  # same w(0) each episode
         if cfg.mode == "real":
             self.bank = hfl.init_bank(self._init_fn, key, cfg.n_devices)
+            if cfg.mesh is not None:
+                # start the episode with the bank already row-sharded so
+                # the first round never materializes it on one chip
+                from repro.core import flatbank
+                self.bank = flatbank.sharded_bank_spec(
+                    self.bank, cfg.mesh).place_bank(self.bank)
             self.global_model = hfl.bank_select(self.bank, 0)
             self.edge_models = jax.tree.map(
                 lambda a: jnp.stack([a] * cfg.n_edges),

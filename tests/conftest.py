@@ -1,9 +1,22 @@
+"""Suite-wide defaults. This conftest runs before any test module
+imports jax, so the env vars below are set before the backend
+initializes — fresh runners (CI or laptops with GPUs) get the same
+deterministic single-CPU-device configuration the suite is written for.
+
+``setdefault`` only: an explicit environment wins, which is how the
+sharded-parity tier runs this same suite under
+``XLA_FLAGS=--xla_force_host_platform_device_count=8``
+(scripts/ci.sh test-sharded), and how the subprocess sharding tests
+force their own device counts.
+"""
+import os
+
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=1")
+
 import numpy as np
 import pytest
-
-# NOTE: no XLA_FLAGS here on purpose — smoke tests and benches must see
-# ONE device; only the dry-run (and the subprocess sharding tests) force
-# 512/16 placeholder devices.
 
 
 @pytest.fixture(scope="session")
