@@ -1,0 +1,47 @@
+"""Async runtime — simulated wall-clock to fixed accuracy targets:
+synchronous barrier (Vanilla-HFL) vs the event-driven buffered runtime
+(async-fedavg) at the same (γ1, γ2), across buffer sizes K and
+staleness decays, on a heterogeneous cn/us edge mix. The async rows
+should dominate: fast us edges keep the cloud fed while the cn
+stragglers are mid-round (DESIGN.md §4, EXPERIMENTS.md §Async)."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import analytic_cfg
+from repro.core import sync
+from repro.runtime import AsyncConfig
+from repro.sim import AsyncHFLEnv, HFLEnv
+
+
+def _time_to(h, target):
+    t = np.cumsum(h["time"])
+    hit = np.nonzero(np.array(h["acc"]) >= target)[0]
+    return float(t[hit[0]]) if len(hit) else float("inf")
+
+
+def run(quick: bool = True):
+    rows = []
+    g1, g2, target = 4, 2, 0.6
+    cfg = analytic_cfg(n_devices=20, n_edges=4, threshold_time=2000.0,
+                       edge_regions=("cn", "cn", "us", "us"))
+    h = sync.run_vanilla_hfl(HFLEnv(cfg), g1=g1, g2=g2)
+    t_sync = _time_to(h, target)
+    rows.append({"scheme": "sync-barrier", "t_to_0.6_s": round(t_sync, 1),
+                 "final_acc": round(h["final_acc"], 4),
+                 "rounds": h["rounds"]})
+    settings = [("async-k2-poly", 2, "poly", 0.5),
+                ("async-k4-none", 4, "none", 0.0)]
+    if not quick:
+        settings += [("async-k1-poly", 1, "poly", 0.5),
+                     ("async-k2-exp", 2, "exp", 0.8)]
+    for name, k, decay, a in settings:
+        env = AsyncHFLEnv(cfg, AsyncConfig(buffer_k=k, decay=decay,
+                                           decay_a=a))
+        h = sync.run_async_fedavg(env, g1=g1, g2=g2)
+        t = _time_to(h, target)
+        rows.append({"scheme": name, "t_to_0.6_s": round(t, 1),
+                     "final_acc": round(h["final_acc"], 4),
+                     "speedup_vs_sync": round(t_sync / t, 2),
+                     "events": h["rounds"], "flushes": env.n_flushes})
+    return rows

@@ -128,6 +128,31 @@ def run(quick: bool = True):
                  "hbm_bytes_kernel": kern_hbm,
                  "traffic_ratio": round(naive_hbm / kern_hbm, 2)})
     # ------------------------------------------------------------------
+    # staleness-weighted segment_agg (async runtime flush): the decay
+    # folds into the weight vector, so the fused kernel serves the
+    # FedBuff-style buffered aggregation with zero extra HBM traffic —
+    # the (N,) reweight is noise next to the N*P bank read. Oracle:
+    # the numpy/jnp staleness mean (ref.staleness_aggregate_ref
+    # semantics on one segment).
+    from repro.runtime import staleness_scale
+    tau = rng.integers(0, 5, size=(n_dev,))
+    ws = jnp.asarray(np.asarray(wd) * staleness_scale(tau, "poly", 0.5))
+
+    def stale_oracle(mat_, w_):
+        return (w_[:, None] * mat_).sum(0) / jnp.maximum(w_.sum(), 1e-9)
+
+    us = _time(jax.jit(stale_oracle), mat, ws)
+    us_k = _time(lambda m_, w_: ops.segment_agg(
+        m_, w_, jnp.zeros((n_dev,), jnp.int32), 1), mat, ws)
+    naive_hbm = 4 * (3 * n_dev * p2 + 3 * p2)
+    kern_hbm = 4 * (n_dev * p2 + p2)
+    rows.append({"setting": "segment_agg_stale_64x500k",
+                 "oracle_us_per_call": round(us, 1),
+                 "kernel_us_per_call": round(us_k, 1),
+                 "hbm_bytes_naive": naive_hbm,
+                 "hbm_bytes_kernel": kern_hbm,
+                 "traffic_ratio": round(naive_hbm / kern_hbm, 2)})
+    # ------------------------------------------------------------------
     # end-to-end aggregation: per-leaf tree-path oracle vs flat-bank
     # engine (flatten -> segment_agg -> unflatten) on a nested pytree
     leaf = p2 // 4

@@ -26,6 +26,7 @@ BENCHES = [
     "table1_cluster",
     "fig11_noniid",
     "fig12_pca",
+    "fig13_async",
     "table2_enhancement",
     "kernels_bench",
     "roofline",

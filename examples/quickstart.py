@@ -4,20 +4,24 @@ synthetic federated MNIST (the paper's pipeline end-to-end, small).
     PYTHONPATH=src python examples/quickstart.py [--episodes 3]
 
 Walks through: profiling/clustering -> HFL env -> PPO agent episodes ->
-evaluation vs a Vanilla-HFL baseline.
+evaluation vs a Vanilla-HFL baseline -> the event-driven async runtime
+(``--async-k`` sets the cloud buffer size; 0 skips the async run).
 """
 import argparse
 
 import numpy as np
 
 from repro.core import sync
-from repro.sim import EnvConfig, HFLEnv
+from repro.runtime import AsyncConfig
+from repro.sim import AsyncHFLEnv, EnvConfig, HFLEnv
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--episodes", type=int, default=3)
     ap.add_argument("--mode", default="real", choices=["real", "analytic"])
+    ap.add_argument("--async-k", type=int, default=1,
+                    help="async buffer size K (0 skips the async demo)")
     args = ap.parse_args()
 
     cfg = EnvConfig(task="mnist", mode=args.mode, n_devices=10, n_edges=2,
@@ -38,6 +42,16 @@ def main():
     h2 = sync.run_vanilla_hfl(HFLEnv(cfg), g1=2, g2=2)
     print(f"vanilla-hfl: acc={h2['final_acc']:.3f} "
           f"energy={h2['total_energy']:.1f} mAh rounds={h2['rounds']}")
+
+    if args.async_k:
+        print(f"\n== async runtime (event-driven, buffer K="
+              f"{args.async_k}, poly staleness decay) ==")
+        aenv = AsyncHFLEnv(cfg, AsyncConfig(buffer_k=args.async_k,
+                                            decay="poly", decay_a=0.5))
+        h3 = sync.run_async_fedavg(aenv, g1=2, g2=2)
+        print(f"async-fedavg: acc={h3['final_acc']:.3f} "
+              f"energy={h3['total_energy']:.1f} mAh "
+              f"uploads={h3['rounds']} flushes={aenv.n_flushes}")
 
 
 if __name__ == "__main__":

@@ -8,6 +8,11 @@
 #                                verify command)
 #   scripts/ci.sh test-sharded   sharded-parity tier: the mesh tests
 #                                under 8 forced host devices
+#   scripts/ci.sh test-runtime   the async-runtime slice of tier-1
+#                                (event queue, staleness buffer,
+#                                edge-round parity, hardware models) —
+#                                a fast loop for runtime work; the
+#                                plain `test` tier runs these too
 #   scripts/ci.sh bench          kernels_bench + regression gate vs the
 #                                committed BENCH_kernels.json (>20%
 #                                kernel/oracle regression fails;
@@ -22,7 +27,7 @@ export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
 
 cmd="${1:-test}"
 # consume the subcommand word only if one was actually given
-case "${1:-}" in lint|test|test-sharded|bench) shift ;; esac
+case "${1:-}" in lint|test|test-sharded|test-runtime|bench) shift ;; esac
 case "$cmd" in
   lint)
     python scripts/lint.py
@@ -33,6 +38,10 @@ case "$cmd" in
   test-sharded)
     XLA_FLAGS="--xla_force_host_platform_device_count=8" \
       python -m pytest -x -q tests/test_sharded_bank.py "$@"
+    ;;
+  test-runtime)
+    python -m pytest -x -q tests/test_async_runtime.py \
+      tests/test_hardware.py "$@"
     ;;
   bench)
     python scripts/bench_gate.py

@@ -349,6 +349,83 @@ def make_cloud_round(loss_fn: Callable, lr: float, batch_size: int,
 
 
 # ---------------------------------------------------------------------------
+# one edge-local round — the async runtime's unit of work
+# ---------------------------------------------------------------------------
+
+def make_edge_round(loss_fn: Callable, lr: float, batch_size: int,
+                    n_edges: int, max_g1: int, max_g2: int):
+    """Builds a jit-compiled *edge-local* round (bank buffer donated):
+
+    edge_round(bank, x, y, sizes, edge_assign, edge_id, g1, g2,
+               global_vec, key) -> (bank, edge_vec (P,) f32)
+
+    The async runtime's unit of work (repro.runtime): edge ``edge_id``'s
+    devices seed from the flat global snapshot ``global_vec`` (the model
+    version the edge last downloaded), run gamma2 edge syncs of gamma1
+    local epochs, and return their edge aggregate as a flat ``(P,)``
+    update for the cloud's staleness buffer. Rows of other edges are
+    carried untouched (the bank is a shared scratch buffer across
+    interleaved edge rounds).
+
+    Bitwise contract with ``make_cloud_round``: the loop structure, key
+    chain, and kernel launches are the *same program* restricted to one
+    edge — masked weights zero the other edges out of the one-hot
+    matmuls, so with every edge starting from the same ``global_vec``
+    and the same ``key``, edge ``j``'s returned update equals row ``j``
+    of the synchronous round's edge matrix bit for bit (the async-parity
+    test in tests/test_async_runtime.py pins this).
+
+    ``edge_id``/``g1``/``g2`` are traced scalars — one compiled round
+    serves every (edge, action) pair the agent picks.
+    """
+    local_train = make_local_trainer(loss_fn, lr, batch_size)
+
+    def edge_round(bank, x, y, sizes, edge_assign, edge_id, g1, g2,
+                   global_vec, key):
+        spec = flatbank.bank_spec(bank)
+        row_active = (edge_assign == edge_id)
+        w = sizes * row_active.astype(sizes.dtype)
+        g1_dev = jnp.where(row_active, g1, 0)
+        g2_dev = jnp.where(row_active, g2, 0)
+
+        agg = lambda mat: ops.segment_agg(mat, w, edge_assign, n_edges)
+        resync = lambda em: ops.segment_broadcast(
+            em, edge_assign, out_dtype=spec.dtype)
+
+        # devices resume from the global snapshot the edge downloaded
+        mat = spec.flatten(bank)
+        mat = jnp.where(row_active[:, None],
+                        global_vec[None, :].astype(mat.dtype), mat)
+        bank = spec.unflatten(mat)
+        row_mask = row_active.reshape(-1, 1)
+        edge_1h = (jnp.arange(n_edges) == edge_id).reshape(-1, 1)
+
+        def t2_step(carry, t2):
+            bank, edge_mat, key = carry
+            key, sub = jax.random.split(key)
+            active_dev = t2 < g2_dev
+            g1_eff = jnp.where(active_dev, g1_dev, 0)
+            bank = local_train(bank, x, y, g1_eff, max_g1, sub)
+            a = agg(spec.flatten(bank))
+            active_edge = jnp.logical_and(t2 < g2, edge_1h)
+            edge_mat = jnp.where(active_edge, a, edge_mat)
+            # resync only this edge's rows; the rest of the bank is
+            # other edges' in-flight state and must not move
+            mat = jnp.where(row_mask, resync(edge_mat),
+                            spec.flatten(bank))
+            bank = spec.unflatten(mat)
+            return (bank, edge_mat, key), None
+
+        edge_mat0 = agg(spec.flatten(bank))
+        (bank, edge_mat, _), _ = jax.lax.scan(
+            t2_step, (bank, edge_mat0, key), jnp.arange(max_g2))
+        edge_vec = jnp.take(edge_mat, edge_id, axis=0)
+        return bank, edge_vec
+
+    return jax.jit(edge_round, donate_argnums=(0,))
+
+
+# ---------------------------------------------------------------------------
 # Vanilla-FL (FedAvg) round — the paper's two-layer baseline
 # ---------------------------------------------------------------------------
 

@@ -14,6 +14,15 @@ time/energy/accuracy are measured identically:
   share        : data-distribution-aware topology shaping [9] + HFL
   hwamei       : the conference-version agent (PPO, no GAE, linear reward)
   arena        : this paper (PPO + GAE + shaped reward + projection)
+
+Asynchronous runtime schemes (repro.runtime + ``AsyncHFLEnv``, where
+one env call = one edge upload event; DESIGN.md §Async runtime):
+
+  async-fedavg : fixed (γ1, γ2) at every upload event; the cloud
+                 aggregates the staleness-decayed update buffer
+  async-arena  : the PPO agent picks (γ1, γ2) per edge at its upload
+                 event (``run_async_arena``; train with ``train_agent``
+                 on an ``AsyncHFLEnv`` — the env API is identical)
 """
 from __future__ import annotations
 
@@ -158,6 +167,36 @@ def run_share(env, g1: int = 5, g2: int = 4):
 
 
 # ---------------------------------------------------------------------------
+# asynchronous runtime schemes (event-driven AsyncHFLEnv)
+# ---------------------------------------------------------------------------
+
+def run_async_fedavg(env, g1: int = 5, g2: int = 4,
+                     max_events: int = 10000):
+    """Async FedAvg-over-HFL: every edge re-launches with the same
+    fixed (γ1, γ2) at each of its upload events; the cloud advances on
+    the staleness-decayed buffer. ``env`` must be an ``AsyncHFLEnv``
+    (its per-event step signature is what makes this asynchronous)."""
+    env.reset()
+    done, i = False, 0
+    while not done and i < max_events:
+        _, _, done, _ = env.step(np.array([g1, g2], np.float64))
+        i += 1
+    return _history(env)
+
+
+def run_async_arena(env, agent):
+    """One deterministic evaluation episode of a trained agent on the
+    async env: the agent acts per edge at its upload event (the 2-dim
+    action programs that edge's next round)."""
+    s = env.reset()
+    done = False
+    while not done:
+        a, _, _ = agent.act(s, deterministic=True)
+        s, _, done, _ = env.step(a)
+    return _history(env)
+
+
+# ---------------------------------------------------------------------------
 # learned schemes (Arena / Hwamei)
 # ---------------------------------------------------------------------------
 
@@ -232,4 +271,5 @@ SCHEMES: dict[str, Callable] = {
     "var-freq-b": run_var_freq_b,
     "favor": run_favor,
     "share": run_share,
+    "async-fedavg": run_async_fedavg,    # needs an AsyncHFLEnv
 }

@@ -10,6 +10,7 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.models import attention as attn_mod
 from repro.models import rwkv as rwkv_mod
@@ -52,6 +53,37 @@ def segment_agg_ref(bank, weights, segment_ids, num_segments: int):
 def segment_broadcast_ref(models, segment_ids, out_dtype=None):
     """(E, P) x (N,) -> (N, P): out[i] = models[segment_ids[i]]."""
     return models[segment_ids].astype(out_dtype or models.dtype)
+
+
+def staleness_scale_ref(tau, decay: str = "poly", a: float = 0.5):
+    """Numpy staleness decay s(tau): ``none`` -> 1, ``poly`` ->
+    (1+tau)^-a (FedBuff), ``exp`` -> a^tau. The oracle twin of
+    ``repro.runtime.buffer.staleness_scale``."""
+    tau = np.asarray(tau, np.float32)
+    if decay == "none":
+        return np.ones_like(tau)
+    if decay == "poly":
+        return (1.0 + tau) ** (-a)
+    if decay == "exp":
+        return np.power(np.float32(a), tau)
+    raise ValueError(f"unknown staleness decay {decay!r}")
+
+
+def staleness_aggregate_ref(updates, weights, tau, decay: str = "poly",
+                            a: float = 0.5):
+    """Numpy oracle for the async cloud flush: ``(K, P)`` buffered
+    updates x ``(K,)`` base weights x ``(K,)`` integer staleness ->
+    ``(P,)``
+
+        out = sum_j w_j s(tau_j) u_j / max(sum_j w_j s(tau_j), 1e-9)
+
+    i.e. the staleness decay *folds into the weight vector* of the
+    ordinary weighted mean — which is why the fused ``segment_agg``
+    kernel (and its sharded ``shard_map`` path) serve the async runtime
+    unchanged (``repro.runtime.buffer.StalenessBuffer``)."""
+    u = np.asarray(updates, np.float32)
+    w = np.asarray(weights, np.float32) * staleness_scale_ref(tau, decay, a)
+    return (w[:, None] * u).sum(0) / max(float(w.sum()), 1e-9)
 
 
 def weighted_aggregate_ref(bank, weights, segment_ids, num_segments: int):

@@ -1,0 +1,23 @@
+"""Event-driven asynchronous HFL runtime.
+
+Replaces the lockstep cloud barrier (``t_use = t_edge.max()`` in
+``repro.sim.env.HFLEnv``) with edges that report on their own clocks:
+
+* ``repro.runtime.clock`` — deterministic event-queue simulator; per-edge
+  upload events are scheduled from the ``repro.sim.hardware`` time/energy
+  models, so edges keep training while others sync.
+* ``repro.runtime.buffer`` — FedBuff-style cloud update buffer with
+  staleness-decayed weights ``w_j * s(tau_j)``; the decay folds into the
+  weight vector of the fused ``segment_agg`` Pallas kernel, so the
+  single-chip and sharded (``shard_map``) aggregation paths both work
+  unchanged.
+
+``repro.sim.env.AsyncHFLEnv`` drives both from the DRL loop (one env
+step = one edge upload event); ``repro.core.sync.run_async_fedavg`` /
+``run_async_arena`` are the matching schemes. Design notes: DESIGN.md
+§Async runtime.
+"""
+from repro.runtime.clock import (  # noqa: F401
+    Event, EventQueue, RoundCost, edge_round_cost)
+from repro.runtime.buffer import (  # noqa: F401
+    AsyncConfig, StalenessBuffer, staleness_scale)

@@ -1,0 +1,160 @@
+"""FedBuff-style cloud update buffer with staleness-decayed weights.
+
+The cloud no longer waits for every edge: uploads accumulate in a
+bounded buffer and the global model advances as soon as ``capacity``
+(K) updates have arrived.  Each buffered update ``j`` carries the model
+version ``v_j`` it trained from; at flush time its aggregation weight is
+
+    w_j * s(tau_j),   tau_j = v_flush - v_j
+
+with ``s`` a staleness-decay function (Hu et al., arXiv:2107.11415;
+FedBuff).  Because the decay **folds into the weight vector**, the
+flush is exactly the dataset-size-weighted segment mean the synchronous
+path already computes — one fused ``segment_agg`` Pallas launch on the
+stacked ``(K, P)`` update matrix, and under a mesh the *unchanged*
+``shard_map`` + psum path from ``repro.core.hfl.weighted_aggregate``.
+The numpy oracle is ``repro.kernels.ref.staleness_aggregate_ref``.
+
+Flush order is canonical (sorted by (edge, arrival)) so that with zero
+decay and ``capacity == n_edges`` the flush is *bitwise* identical to
+the synchronous cloud aggregation, whatever order the uploads arrived
+in.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class AsyncConfig:
+    """Knobs of the asynchronous runtime (DESIGN.md §Async runtime)."""
+    buffer_k: int = 0            # flush after K buffered uploads
+                                 # (0 -> n_edges, the full-participation
+                                 # FedAvg-equivalent setting)
+    decay: str = "poly"          # none | poly | exp   (s(tau) family)
+    decay_a: float = 0.5         # poly: (1+tau)^-a ; exp: a^tau
+    max_staleness: int = 0       # drop updates older than this (0 = keep)
+
+
+def staleness_scale(tau, decay: str = "poly", a: float = 0.5):
+    """s(tau) >= 0 for integer staleness tau (vectorized, numpy).
+
+    ``none``: s = 1 (pure FedAvg weighting — the parity setting);
+    ``poly``: s = (1 + tau)^-a  (FedBuff's polynomial decay);
+    ``exp`` : s = a^tau         (exponential forgetting, 0 < a <= 1).
+    """
+    tau = np.asarray(tau, np.float32)
+    if decay == "none":
+        return np.ones_like(tau)
+    if decay == "poly":
+        return (1.0 + tau) ** (-a)
+    if decay == "exp":
+        if not 0.0 < a <= 1.0:
+            raise ValueError(f"exp decay needs 0 < a <= 1, got {a}")
+        return np.power(np.float32(a), tau)
+    raise ValueError(f"unknown staleness decay {decay!r}")
+
+
+@dataclasses.dataclass
+class _Slot:
+    edge: int
+    vec: object          # (P,) flat update
+    weight: float        # |D_j| (edge dataset size)
+    version: int         # global-model version the update trained from
+    arrival: int         # monotone arrival index (flush-order tiebreak)
+    meta: dict
+
+
+class StalenessBuffer:
+    """Bounded buffer of flat ``(P,)`` edge updates.
+
+    ``push`` records an update with its base version; ``ready`` when
+    ``capacity`` updates are held; ``flush(version)`` aggregates them
+    with staleness-decayed weights into one ``(P,)`` global update and
+    empties the buffer. Aggregation runs through the fused
+    ``segment_agg`` kernel — with ``mesh`` (and K divisible by the mesh
+    size) through the sharded ``shard_map`` + psum path.
+    """
+
+    def __init__(self, capacity: int, decay: str = "poly",
+                 decay_a: float = 0.5, mesh=None):
+        if capacity < 1:
+            raise ValueError(f"buffer capacity must be >= 1, got {capacity}")
+        self.capacity = int(capacity)
+        self.decay = decay
+        self.decay_a = float(decay_a)
+        self.mesh = mesh
+        self._slots: list[_Slot] = []
+        self._arrivals = 0
+
+    def __len__(self) -> int:
+        return len(self._slots)
+
+    @property
+    def ready(self) -> bool:
+        return len(self._slots) >= self.capacity
+
+    def edges(self) -> list:
+        return [s.edge for s in self._slots]
+
+    def push(self, edge: int, vec, weight: float, version: int,
+             **meta) -> None:
+        self._slots.append(_Slot(edge=int(edge), vec=vec,
+                                 weight=float(weight), version=int(version),
+                                 arrival=self._arrivals, meta=meta))
+        self._arrivals += 1
+
+    def flush(self, version: int, max_staleness: int = 0):
+        """Aggregate the buffered updates against global ``version``.
+
+        Returns ``(global_vec (P,) f32, info)``; ``info`` carries the
+        per-slot edges, staleness values and effective weights. Updates
+        staler than ``max_staleness`` (when > 0) are dropped *before*
+        aggregation; if every update is dropped, returns ``(None, info)``
+        and the buffer still empties.
+        """
+        slots = sorted(self._slots, key=lambda s: (s.edge, s.arrival))
+        self._slots = []
+        tau = np.array([version - s.version for s in slots], np.int64)
+        if max_staleness > 0:
+            keep = tau <= max_staleness
+            dropped = [s.edge for s, k in zip(slots, keep) if not k]
+            slots = [s for s, k in zip(slots, keep) if k]
+            tau = tau[keep]
+        else:
+            dropped = []
+        info = {"edges": [s.edge for s in slots],
+                "staleness": tau.tolist(), "dropped": dropped,
+                "meta": [s.meta for s in slots]}
+        if not slots:
+            return None, info
+        scale = staleness_scale(tau, self.decay, self.decay_a)
+        w = jnp.asarray(
+            np.array([s.weight for s in slots], np.float32) * scale)
+        info["weights"] = np.asarray(w).tolist()
+        if any(s.vec is None for s in slots):
+            # metadata-only mode (the analytic env): weights/staleness
+            # bookkeeping without a model update to aggregate
+            return None, info
+        stack = jnp.stack([jnp.asarray(s.vec) for s in slots])
+        glob = _aggregate(stack, w, self.mesh)
+        return glob, info
+
+
+def _aggregate(stack, w, mesh: Optional[object]):
+    """One-segment staleness-weighted mean of the (K, P) update stack —
+    the same kernel launches the synchronous cloud aggregation uses."""
+    from repro.core import hfl                     # local: avoid cycle
+    from repro.kernels import ops
+    k = stack.shape[0]
+    seg = jnp.zeros((k,), jnp.int32)
+    if mesh is not None and k % int(mesh.size) == 0:
+        out = hfl.weighted_aggregate({"u": stack}, w, seg, 1,
+                                     mesh=mesh)["u"]
+    else:
+        out = ops.segment_agg(stack, w, seg, 1)
+    return out[0]

@@ -1,2 +1,2 @@
 from repro.sim.hardware import CommModel, DeviceProfiles  # noqa: F401
-from repro.sim.env import HFLEnv, EnvConfig  # noqa: F401
+from repro.sim.env import AsyncHFLEnv, HFLEnv, EnvConfig  # noqa: F401

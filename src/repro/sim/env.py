@@ -13,8 +13,15 @@ Two fidelity modes sharing one interface:
   PPO agent for the paper's full episode counts (1500/700) at tractable
   cost; EXPERIMENTS.md reports both modes.
 
-One env step = one cloud aggregation round driven by the per-edge action
-(γ1, γ2) — exactly Algorithm 1's inner loop.
+One ``HFLEnv`` step = one cloud aggregation round driven by the
+per-edge action (γ1, γ2) — exactly Algorithm 1's inner loop, with the
+synchronous barrier ``t_use = max_j t_edge_j``.
+
+``AsyncHFLEnv`` (below) removes that barrier: edges run on their own
+clocks through the event-driven runtime (``repro.runtime``), the cloud
+aggregates a staleness-decayed update buffer, and one env step = one
+edge upload event (2-dim per-edge action). DESIGN.md §4 has the design
+notes; EXPERIMENTS.md §Calibration the async analytic-mode update.
 """
 from __future__ import annotations
 
@@ -63,6 +70,8 @@ class EnvConfig:
     drift_coef: float = 0.25         # non-IID drift per unbalanced epoch
     stale_coef: float = 0.015        # large-γ2 staleness penalty
     noise: float = 0.004
+    cov_pow: float = 0.5             # async: partial-buffer coverage
+                                     # exponent (EXPERIMENTS.md §Calib.)
 
     def fixup(self) -> "EnvConfig":
         if self.task == "cifar" and self.threshold_time == 3000.0:
@@ -115,6 +124,7 @@ class HFLEnv:
                 scheme=cfg.data_scheme, seed=cfg.seed,
                 alpha=cfg.dirichlet_alpha)
             loss_fn = lambda p, b: model_mod.cnn_loss(self._apply_fn, p, b)
+            self._loss_fn = loss_fn       # AsyncHFLEnv builds edge rounds
             # already jit-compiled; donates the bank buffer per round.
             # With cfg.mesh the round runs sharded (bank rows split over
             # the mesh; see repro.core.flatbank.ShardedBankSpec).
@@ -345,3 +355,246 @@ class HFLEnv:
     @property
     def action_dim(self):
         return 2 * self.cfg.n_edges
+
+
+# ---------------------------------------------------------------------------
+# event-driven asynchronous mode (repro.runtime; DESIGN.md §Async runtime)
+# ---------------------------------------------------------------------------
+
+class AsyncHFLEnv(HFLEnv):
+    """Event-driven asynchronous HFL: edges report on their own clocks.
+
+    The synchronous env charges every round ``max_j t_edge_j`` — one
+    straggler dominates wall-clock. Here each edge trains continuously:
+    it downloads the current global model, runs its (γ1, γ2) round, and
+    posts an *upload event* after its simulated per-edge duration
+    (``repro.runtime.clock``). The cloud holds uploads in a FedBuff-style
+    buffer (``repro.runtime.buffer``) and advances the global model —
+    with staleness-decayed weights ``w_j s(τ_j)`` — once ``buffer_k``
+    updates are in. With zero decay and ``buffer_k == n_edges`` the
+    flush is bitwise the synchronous cloud aggregation.
+
+    One env **step = one upload event**: the action ``(γ1, γ2)``
+    programs the *next* round of the edge whose upload was just
+    processed, so the agent acts per edge at upload events rather than
+    per global round (action_dim == 2). The observation appends three
+    columns to the synchronous state: per-edge staleness, in-flight
+    status, and a deciding-edge one-hot (row 0 carries the buffer fill
+    fraction).
+    """
+
+    def __init__(self, cfg: EnvConfig, async_cfg=None):
+        from repro.runtime import AsyncConfig
+        if cfg.mode == "real" and cfg.mesh is not None:
+            # make_edge_round is single-chip: running it over a
+            # row-sharded bank would silently gather the full (N, P)
+            # bank onto one device, voiding the placement contract the
+            # sharded sync path guarantees (ROADMAP open item
+            # 'Mesh-aware make_edge_round'; the buffered *flush* does
+            # support meshes via StalenessBuffer(mesh=...))
+            raise NotImplementedError(
+                "AsyncHFLEnv real mode does not support EnvConfig.mesh "
+                "yet — the per-edge round is single-chip (see ROADMAP)")
+        super().__init__(cfg)
+        self.acfg = async_cfg or AsyncConfig()
+        self.buffer_k = self.acfg.buffer_k or cfg.n_edges
+        if cfg.mode == "real":
+            self._edge_round = hfl.make_edge_round(
+                self._loss_fn, cfg.lr, cfg.batch_size, cfg.n_edges,
+                cfg.gamma_max, cfg.gamma_max)
+
+    # ------------------------------------------------------------------
+    def reset(self) -> np.ndarray:
+        from repro.core import flatbank
+        from repro.runtime import EventQueue, StalenessBuffer
+        cfg = self.cfg
+        m = cfg.n_edges
+        # placeholders: the superclass warmup round builds a state
+        # before the async structures exist
+        self.buffer = None
+        self._deciding = None
+        self._in_flight = np.zeros(m, bool)
+        self._staleness = np.zeros(m, np.float32)
+        super().reset()                 # sync warmup round + PCA fit
+        self.version = 0
+        self._abase = self._next_key()  # generation keys: fold_in(abase, v)
+        if cfg.mode == "real":
+            self._spec = flatbank.bank_spec(self.bank)
+            self._global_vec = self._spec.flatten_model(self.global_model)
+            self._edge_mat = self._spec.flatten(self.edge_models)
+            sizes = self.fed.device_sizes()
+            self._dev_sizes = sizes
+            self._edge_w = np.asarray(jax.ops.segment_sum(
+                sizes, self._edge_assign_j, m), np.float32)
+        else:
+            self._edge_w = self._edge_sizes.copy()
+        self.queue = EventQueue()
+        self.queue.now = cfg.threshold_time - self.t_re  # after warmup
+        self.buffer = StalenessBuffer(
+            self.buffer_k, decay=self.acfg.decay,
+            decay_a=self.acfg.decay_a, mesh=cfg.mesh)
+        self.n_flushes = 0
+        self._edge_version = np.zeros(m, np.int64)
+        self._last_time = self.queue.now
+        g0 = np.full(2, 2, np.int64)    # warmup frequencies (Alg. 1 l.3)
+        for j in range(m):
+            self._launch_round(j, int(g0[0]), int(g0[1]))
+        ev = self._process_upload()     # first upload picks first decider
+        self._deciding = ev.edge
+        return self._state()
+
+    # ------------------------------------------------------------------
+    def _launch_round(self, edge: int, g1: int, g2: int) -> None:
+        """Edge downloads the current global model and starts a
+        (γ1, γ2) round now; its upload lands after the simulated
+        per-edge duration."""
+        from repro.runtime import edge_round_cost
+        cost = edge_round_cost(self.profiles, self.comm, self.edge_assign,
+                               edge, g1, g2, self.rng)
+        snapshot = self._global_vec if self.cfg.mode == "real" else None
+        self.queue.schedule(cost.time, edge, kind="upload",
+                            g1=g1, g2=g2, cost=cost, version=self.version,
+                            snapshot=snapshot)
+        self._edge_version[edge] = self.version
+        self._in_flight[edge] = True
+
+    def _process_upload(self):
+        """Pop the next upload event, realize its training, buffer the
+        update, and flush the cloud when the buffer fills."""
+        cfg = self.cfg
+        ev = self.queue.pop()
+        j, pay, cost = ev.edge, ev.payload, ev.payload["cost"]
+        self._in_flight[j] = False
+        if cfg.mode == "real":
+            key = jax.random.fold_in(self._abase, pay["version"])
+            self.bank, edge_vec = self._edge_round(
+                self.bank, self.fed.x, self.fed.y, self._dev_sizes,
+                self._edge_assign_j, jnp.int32(j), jnp.int32(pay["g1"]),
+                jnp.int32(pay["g2"]), pay["snapshot"], key)
+            self._edge_mat = self._edge_mat.at[j].set(
+                edge_vec.astype(self._edge_mat.dtype))
+            self.edge_models = self._spec.unflatten(self._edge_mat)
+            self.buffer.push(j, edge_vec, float(self._edge_w[j]),
+                             pay["version"])
+        else:
+            self.buffer.push(j, None, float(self._edge_w[j]),
+                             pay["version"],
+                             epochs=pay["g1"] * pay["g2"], g2=pay["g2"])
+        self.total_energy += cost.energy
+        self._h_edges[j] = np.float32(
+            [cost.t_sgd * pay["g1"] * pay["g2"], cost.ec, cost.energy])
+        self._flushed = False
+        if self.buffer.ready:
+            self._flush()
+        self._staleness = np.float32(self.version - self._edge_version)
+        dt = self.queue.now - self._last_time
+        self._last_time = self.queue.now
+        self.t_re = cfg.threshold_time - self.queue.now
+        self.energy_hist.append(cost.energy)
+        self.acc_hist.append(self.acc)
+        self.time_hist.append(dt)
+        return ev
+
+    def _flush(self) -> None:
+        """Cloud aggregation of the buffered updates (staleness-decayed
+        weights); bumps the model version and re-measures accuracy."""
+        cfg = self.cfg
+        glob, info = self.buffer.flush(self.version,
+                                       self.acfg.max_staleness)
+        self._flush_info = info
+        applied = False
+        if cfg.mode == "real":
+            if glob is not None:
+                self._global_vec = glob
+                self.global_model = self._spec.unflatten_model(glob)
+                self.acc = float(self._acc_fn(
+                    self.global_model, self.fed.test_x, self.fed.test_y))
+                applied = True
+        elif info["edges"]:
+            self.acc = self._analytic_flush(info)
+            applied = True
+        if applied:
+            self.version += 1
+            self.n_flushes += 1
+            self.k += 1
+        self._flushed = applied
+
+    def _analytic_flush(self, info) -> float:
+        """Analytic-mode accuracy update per flush — the synchronous
+        saturating-progress model transplanted to buffered aggregation
+        (EXPERIMENTS.md §Calibration, async notes):
+
+        * each buffered update contributes its per-epoch progress with
+          the *buffer-normalized* staleness weight q_j = w_j s(τ_j) /
+          Σ w s — mirroring the real flush, where the decay folds into
+          the weight vector of a normalized mean (a stale update loses
+          influence, it does not shrink the step);
+        * a partial buffer only represents Σ_b w_j / W of the data, so
+          progress scales by coverage^cov_pow (K = M fresh reduces
+          exactly to the synchronous update);
+        * staleness adds to the γ2 penalty via the mean buffer τ.
+        """
+        cfg = self.cfg
+        slots = info["meta"]
+        epochs = np.float64([s["epochs"] for s in slots])
+        p = 1.0 - np.exp(-cfg.a_rate * epochs)
+        q = np.float64(info["weights"])
+        q = q / max(q.sum(), 1e-12)                  # within-buffer norm
+        coverage = float(sum(self._edge_sizes[j]
+                             for j in set(info["edges"]))
+                         / self._edge_sizes.sum())
+        progress = float(np.sum(q * p)) * coverage ** cfg.cov_pow
+        drift = cfg.drift_coef * float(np.std(epochs)) / max(
+            float(np.mean(epochs)), 1.0) * cfg.a_rate
+        g2s = np.float64([s["g2"] for s in slots])
+        stale = cfg.stale_coef * cfg.a_rate * (
+            float(np.mean(np.maximum(g2s - 4, 0)))
+            + float(np.mean(info["staleness"])))
+        gap = cfg.a_max - self.acc
+        noise = self.rng.normal(0, cfg.noise)
+        new = self.acc + gap * max(progress - drift - stale, 0.0) + noise
+        return float(np.clip(new, 0.05, cfg.a_max))
+
+    # ------------------------------------------------------------------
+    def step(self, action: np.ndarray):
+        """action: (2,) raw continuous (γ1, γ2) for the deciding edge's
+        next round (same nearest-feasible projection as the synchronous
+        env). Advances the simulation by exactly one upload event."""
+        cfg = self.cfg
+        a = np.clip(np.round(np.asarray(action).reshape(-1)[:2]), 1,
+                    cfg.gamma_max).astype(np.int64)
+        acc_old = self.acc
+        self._launch_round(self._deciding, int(a[0]), int(a[1]))
+        ev = self._process_upload()
+        self._deciding = ev.edge
+        cost = ev.payload["cost"]
+        r = reward_mod.reward(self.acc, acc_old, cost.energy, cfg.epsilon)
+        done = self.t_re < 0
+        info = {"acc": self.acc, "energy": cost.energy,
+                "t_use": self.time_hist[-1], "t_re": self.t_re,
+                "edge": ev.edge, "g1": ev.payload["g1"],
+                "g2": ev.payload["g2"], "flushed": self._flushed,
+                "version": self.version,
+                "staleness": self._staleness.copy()}
+        return self._state(), float(r), bool(done), info
+
+    # ------------------------------------------------------------------
+    def _state(self) -> np.ndarray:
+        base = super()._state()                      # (M+1, n_pca+3)
+        m = self.cfg.n_edges
+        extra = np.zeros((m + 1, 3), np.float32)
+        if self.buffer is not None:
+            extra[0, 0] = len(self.buffer) / max(self.buffer_k, 1)
+        extra[1:, 0] = self._staleness / 10.0
+        extra[1:, 1] = self._in_flight.astype(np.float32)
+        if self._deciding is not None:
+            extra[1 + self._deciding, 2] = 1.0
+        return np.concatenate([base, extra], axis=1)
+
+    @property
+    def state_shape(self):
+        return (self.cfg.n_edges + 1, self.cfg.n_pca + 6)
+
+    @property
+    def action_dim(self):
+        return 2

@@ -1,0 +1,399 @@
+"""Event-driven asynchronous HFL runtime (repro.runtime +
+``AsyncHFLEnv``): event-queue determinism, FedBuff staleness buffer vs
+the numpy oracle, bitwise parity of the async path against the
+synchronous barrier round (zero decay, buffer K = n_edges), and the
+straggler-tolerance wall-clock win with heterogeneous cn/us edges."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import flatbank, hfl, sync
+from repro.kernels import ops, ref
+from repro.runtime import (AsyncConfig, Event, EventQueue, StalenessBuffer,
+                           edge_round_cost, staleness_scale)
+from repro.sim import AsyncHFLEnv, EnvConfig, HFLEnv, hardware
+
+
+# ---------------------------------------------------------------------------
+# clock
+# ---------------------------------------------------------------------------
+
+def test_event_queue_orders_by_time_then_seq():
+    q = EventQueue()
+    q.schedule(5.0, edge=0)
+    q.schedule(2.0, edge=1)
+    q.schedule(2.0, edge=2)        # same time: scheduling order wins
+    assert [q.pop().edge for _ in range(3)] == [1, 2, 0]
+    assert q.now == 5.0
+
+
+def test_event_queue_pop_advances_now_and_rejects_past():
+    q = EventQueue()
+    q.schedule(1.5, edge=0)
+    ev = q.pop()
+    assert isinstance(ev, Event) and q.now == 1.5
+    with pytest.raises(ValueError):
+        q.schedule(-0.1, edge=0)
+    with pytest.raises(IndexError):
+        q.pop()
+    assert q.peek() is None and len(q) == 0
+
+
+def test_edge_round_cost_matches_sync_cost_model():
+    """The per-edge cost is the synchronous round's per-edge term
+    gamma2 (gamma1 t_sgd + de) + ec — same hardware models, no
+    cross-edge max."""
+    rng = np.random.default_rng(0)
+    profiles = hardware.DeviceProfiles.sample(rng, 10)
+    comm = hardware.CommModel(["cn", "us"])
+    assign = np.arange(10) % 2
+    c = edge_round_cost(profiles, comm, assign, 0, g1=3, g2=2,
+                        rng=np.random.default_rng(1))
+    assert c.time > 0 and c.energy > 0 and c.t_sgd > 0 and c.ec > 0
+    assert c.time == pytest.approx(2 * 3 * c.t_sgd + c.ec, rel=0.5)
+    # deterministic under a fixed generator state
+    c2 = edge_round_cost(profiles, comm, assign, 0, g1=3, g2=2,
+                         rng=np.random.default_rng(1))
+    assert c2.time == c.time and c2.energy == c.energy
+    # empty participation: only the upload cost remains
+    c3 = edge_round_cost(profiles, comm, assign, 0, g1=3, g2=2,
+                         rng=np.random.default_rng(1),
+                         participate=np.zeros(10, bool))
+    assert c3.energy == 0.0 and c3.time == c3.ec
+
+
+# ---------------------------------------------------------------------------
+# staleness buffer vs the numpy oracle
+# ---------------------------------------------------------------------------
+
+def test_staleness_scale_families():
+    tau = np.array([0, 1, 3])
+    np.testing.assert_allclose(staleness_scale(tau, "none"), 1.0)
+    np.testing.assert_allclose(staleness_scale(tau, "poly", 0.5),
+                               (1.0 + tau) ** -0.5)
+    np.testing.assert_allclose(staleness_scale(tau, "exp", 0.8),
+                               0.8 ** tau, rtol=1e-6)
+    with pytest.raises(ValueError):
+        staleness_scale(tau, "exp", 1.5)
+    with pytest.raises(ValueError):
+        staleness_scale(tau, "nope")
+    # oracle twin agrees
+    for decay, a in [("none", 0.5), ("poly", 0.7), ("exp", 0.9)]:
+        np.testing.assert_allclose(
+            staleness_scale(tau, decay, a),
+            ref.staleness_scale_ref(tau, decay, a), rtol=1e-6)
+
+
+def test_buffer_flush_matches_numpy_oracle():
+    rng = np.random.default_rng(2)
+    k, p = 5, 210
+    vecs = [jnp.asarray(rng.normal(size=(p,)), jnp.float32)
+            for _ in range(k)]
+    w = rng.uniform(0.5, 3.0, size=k)
+    tau = [3, 0, 2, 1, 0]
+    buf = StalenessBuffer(k, decay="poly", decay_a=0.5)
+    for j in range(k):
+        buf.push(j, vecs[j], w[j], version=5 - tau[j])
+    assert buf.ready and len(buf) == k
+    glob, info = buf.flush(version=5)
+    assert len(buf) == 0 and info["staleness"] == tau
+    want = ref.staleness_aggregate_ref(np.stack(vecs), w, tau,
+                                       decay="poly", a=0.5)
+    np.testing.assert_allclose(np.asarray(glob), want, atol=1e-5,
+                               rtol=1e-5)
+
+
+def test_buffer_decay_folds_into_weight_vector_bitwise():
+    """Staleness decay is *only* a reweighting: flushing with decay is
+    bit-identical to the plain fused ``segment_agg`` launch on
+    pre-scaled weights — which is why the sharded shard_map path needs
+    no changes."""
+    rng = np.random.default_rng(3)
+    k, p = 4, 130
+    vecs = [jnp.asarray(rng.normal(size=(p,)), jnp.float32)
+            for _ in range(k)]
+    w = np.asarray(rng.uniform(1.0, 2.0, size=k), np.float32)
+    buf = StalenessBuffer(k, decay="poly", decay_a=0.5)
+    for j in range(k):
+        buf.push(j, vecs[j], w[j], version=0)
+    glob, info = buf.flush(version=2)          # tau = 2 for every slot
+    scaled = jnp.asarray(w * staleness_scale(np.full(k, 2), "poly", 0.5))
+    want = ops.segment_agg(jnp.stack(vecs), scaled,
+                           jnp.zeros((k,), jnp.int32), 1)[0]
+    np.testing.assert_array_equal(np.asarray(glob), np.asarray(want))
+
+
+def test_buffer_flush_order_is_canonical():
+    """Arrival order must not change the flush: slots aggregate sorted
+    by (edge, arrival), so out-of-order uploads still reproduce the
+    synchronous reduction bitwise."""
+    rng = np.random.default_rng(4)
+    k, p = 3, 140
+    vecs = [jnp.asarray(rng.normal(size=(p,)), jnp.float32)
+            for _ in range(k)]
+    w = [1.0, 2.0, 3.0]
+    outs = []
+    for order in ([0, 1, 2], [2, 0, 1], [1, 2, 0]):
+        buf = StalenessBuffer(k, decay="none")
+        for j in order:
+            buf.push(j, vecs[j], w[j], version=0)
+        glob, _ = buf.flush(version=0)
+        outs.append(np.asarray(glob))
+    np.testing.assert_array_equal(outs[0], outs[1])
+    np.testing.assert_array_equal(outs[0], outs[2])
+
+
+def test_buffer_max_staleness_drops_and_metadata_mode():
+    buf = StalenessBuffer(2, decay="none")
+    v = jnp.ones((8,), jnp.float32)
+    buf.push(0, v, 1.0, version=0)
+    buf.push(1, 2 * v, 1.0, version=9)
+    glob, info = buf.flush(version=10, max_staleness=5)
+    assert info["dropped"] == [0] and info["edges"] == [1]
+    np.testing.assert_allclose(np.asarray(glob), 2.0)
+    # every update dropped -> no aggregate, buffer still empties
+    buf.push(0, v, 1.0, version=0)
+    glob, info = buf.flush(version=10, max_staleness=5)
+    assert glob is None and len(buf) == 0
+    # metadata-only slots (the analytic env) never aggregate
+    buf.push(0, None, 1.0, version=0, epochs=4)
+    buf.push(1, None, 2.0, version=0, epochs=8)
+    glob, info = buf.flush(version=1)
+    assert glob is None
+    assert [m["epochs"] for m in info["meta"]] == [4, 8]
+    assert len(info["weights"]) == 2
+    with pytest.raises(ValueError):
+        StalenessBuffer(0)
+
+
+# ---------------------------------------------------------------------------
+# edge_round vs cloud_round: the bitwise-parity contract
+# ---------------------------------------------------------------------------
+
+def _round_fixtures(rng, n):
+    bank = {"w": jnp.asarray(rng.normal(size=(n, 4, 3)), jnp.float32),
+            "b": jnp.asarray(rng.normal(size=(n, 3)), jnp.float32)}
+    x = jnp.asarray(rng.normal(size=(n, 8, 4)), jnp.float32)
+    y = jnp.asarray(rng.normal(size=(n, 8)), jnp.float32)
+    sizes = jnp.asarray(rng.uniform(1, 3, size=(n,)), jnp.float32)
+
+    def loss(p, batch):
+        return jnp.mean((batch["x"] @ p["w"][..., 0] - batch["y"]) ** 2)
+
+    return bank, x, y, sizes, loss
+
+
+def test_edge_rounds_reproduce_sync_round_bitwise():
+    """Per-edge async rounds + a zero-decay K=M flush == one synchronous
+    cloud round, *bitwise*: same key, same kernels, masked weights zero
+    the other edges out of the one-hot matmuls."""
+    rng = np.random.default_rng(7)
+    n, m = 12, 3
+    bank, x, y, sizes, loss = _round_fixtures(rng, n)
+    seg = jnp.asarray(rng.integers(0, m, size=(n,)), jnp.int32)
+    g1 = jnp.asarray([2, 1, 3])
+    g2 = jnp.asarray([1, 2, 2])
+    key = jax.random.PRNGKey(0)
+    spec = flatbank.bank_spec(bank)
+
+    glob0 = jax.tree.map(lambda a: a[0], bank)
+    bank_sync = hfl.broadcast_model(glob0, n)
+    sync_round = hfl.make_cloud_round(loss, 0.05, 4, m, 3, 2)
+    _, gm_sync, em_sync = sync_round(
+        jax.tree.map(jnp.copy, bank_sync), x, y, sizes, seg, g1, g2, key)
+    em_mat = spec.flatten(em_sync)
+
+    er = hfl.make_edge_round(loss, 0.05, 4, m, max_g1=3, max_g2=2)
+    gvec = spec.flatten_model(glob0)
+    buf = StalenessBuffer(m, decay="none")
+    esz = np.asarray(jax.ops.segment_sum(sizes, seg, m))
+    for j in range(m):
+        _, vec = er(jax.tree.map(jnp.copy, bank_sync), x, y, sizes, seg,
+                    jnp.int32(j), g1[j], g2[j], gvec, key)
+        # each edge's update equals its row of the sync edge matrix
+        np.testing.assert_array_equal(np.asarray(vec),
+                                      np.asarray(em_mat[j]))
+        buf.push(j, vec, float(esz[j]), version=0)
+    glob, _ = buf.flush(version=0)
+    np.testing.assert_array_equal(np.asarray(glob),
+                                  np.asarray(spec.flatten_model(gm_sync)))
+    # and the numpy staleness oracle agrees (to reduction-order error)
+    want = ref.staleness_aggregate_ref(
+        np.stack([np.asarray(em_mat[j]) for j in range(m)]), esz,
+        np.zeros(m), decay="none")
+    np.testing.assert_allclose(np.asarray(glob), want, atol=1e-5,
+                               rtol=1e-5)
+
+
+def test_edge_round_leaves_other_edges_untouched():
+    """The bank is shared scratch across interleaved edge rounds: rows
+    of edges other than the trained one must come back bit-identical."""
+    rng = np.random.default_rng(8)
+    n, m = 8, 2
+    bank, x, y, sizes, loss = _round_fixtures(rng, n)
+    seg = jnp.asarray([0, 0, 0, 1, 1, 1, 1, 0], jnp.int32)
+    spec = flatbank.bank_spec(bank)
+    gvec = spec.flatten_model(jax.tree.map(lambda a: a[0], bank))
+    before = np.asarray(spec.flatten(bank))
+    er = hfl.make_edge_round(loss, 0.05, 4, m, max_g1=2, max_g2=2)
+    out_bank, _ = er(jax.tree.map(jnp.copy, bank), x, y, sizes, seg,
+                     jnp.int32(0), jnp.int32(2), jnp.int32(2), gvec,
+                     jax.random.PRNGKey(3))
+    after = np.asarray(spec.flatten(out_bank))
+    rows1 = np.asarray(seg) == 1
+    np.testing.assert_array_equal(after[rows1], before[rows1])
+    # and the trained edge's rows moved
+    assert np.abs(after[~rows1] - before[~rows1]).max() > 0
+
+
+# ---------------------------------------------------------------------------
+# AsyncHFLEnv: real-mode parity, analytic behaviour, straggler win
+# ---------------------------------------------------------------------------
+
+REAL_CFG = dict(task="mnist", mode="real", n_devices=8, n_edges=2,
+                n_local=64, batch_size=32, threshold_time=240.0,
+                gamma_max=3, seed=0)
+
+
+def test_async_env_real_first_flush_bitwise_equals_sync_round():
+    """Acceptance pin: zero decay + buffer K = n_edges reproduces the
+    synchronous round's aggregation exactly on seed 0 — the first flush
+    equals one ``make_cloud_round`` step from the same post-warmup
+    snapshot with the generation-0 key."""
+    cfg = EnvConfig(**REAL_CFG)
+    env = AsyncHFLEnv(cfg, AsyncConfig(buffer_k=cfg.n_edges,
+                                       decay="none"))
+    env.reset()
+    gvec0 = jnp.array(env._global_vec, copy=True)
+    abase = env._abase
+    done = False
+    while env.n_flushes == 0 and not done:
+        _, _, done, info = env.step(np.array([2.0, 2.0]))
+    assert env.n_flushes == 1
+    # the parity regime needs one generation-0 update per edge
+    assert sorted(env._flush_info["edges"]) == list(range(cfg.n_edges))
+    assert env._flush_info["staleness"] == [0] * cfg.n_edges
+
+    m, n = cfg.n_edges, cfg.n_devices
+    bank_sync = hfl.broadcast_model(env._spec.unflatten_model(gvec0), n)
+    round_ = hfl.make_cloud_round(env._loss_fn, cfg.lr, cfg.batch_size,
+                                  m, cfg.gamma_max, cfg.gamma_max)
+    _, gm, _ = round_(bank_sync, env.fed.x, env.fed.y,
+                      env.fed.device_sizes(), env._edge_assign_j,
+                      jnp.full((m,), 2), jnp.full((m,), 2),
+                      jax.random.fold_in(abase, 0))
+    np.testing.assert_array_equal(
+        np.asarray(env._global_vec),
+        np.asarray(env._spec.flatten_model(gm)))
+
+
+def test_async_env_real_flush_matches_staleness_oracle():
+    """Every real-mode flush is the numpy staleness oracle applied to
+    the buffered updates (poly decay, partial buffer K < M)."""
+    cfg = EnvConfig(**REAL_CFG)
+    env = AsyncHFLEnv(cfg, AsyncConfig(buffer_k=1, decay="poly",
+                                       decay_a=0.5))
+    env.reset()
+    # reset already processed one upload -> one flush of one update
+    assert env.n_flushes == 1
+    vec_before = None
+    for _ in range(2):
+        _, _, _, info = env.step(np.array([2.0, 2.0]))
+        assert info["flushed"]
+        j = info["edge"]
+        tau = env._flush_info["staleness"]
+        assert env._flush_info["edges"] == [j]
+        want = ref.staleness_aggregate_ref(
+            np.asarray(env._edge_mat)[None, j],
+            np.array([env._edge_w[j]]), tau, decay="poly", a=0.5)
+        np.testing.assert_allclose(np.asarray(env._global_vec), want,
+                                   atol=1e-5, rtol=1e-5)
+        assert vec_before is None or not np.array_equal(
+            np.asarray(env._global_vec), vec_before)
+        vec_before = np.asarray(env._global_vec).copy()
+
+
+def test_async_env_observation_carries_staleness_and_inflight():
+    cfg = EnvConfig(task="mnist", mode="analytic", n_devices=20,
+                    n_edges=4, threshold_time=600.0, seed=0)
+    env = AsyncHFLEnv(cfg, AsyncConfig(buffer_k=2))
+    s = env.reset()
+    assert s.shape == env.state_shape == (5, 12)
+    assert env.action_dim == 2
+    stale_col, flight_col, decide_col = s[1:, -3], s[1:, -2], s[1:, -1]
+    assert np.isfinite(s).all()
+    # the deciding edge is not in flight; every other edge is
+    assert decide_col.sum() == 1.0
+    j = int(np.argmax(decide_col))
+    assert flight_col[j] == 0.0 and flight_col.sum() == cfg.n_edges - 1
+    assert (stale_col >= 0).all()
+    assert s[0, -3] == len(env.buffer) / env.buffer_k
+
+
+def test_async_env_analytic_episode_terminates_and_learns():
+    cfg = EnvConfig(task="mnist", mode="analytic", n_devices=20,
+                    n_edges=4, threshold_time=600.0, seed=0)
+    env = AsyncHFLEnv(cfg, AsyncConfig(buffer_k=2))
+    env.reset()
+    done, i = False, 0
+    while not done and i < 1000:
+        s, r, done, info = env.step(np.array([2.0, 2.0]))
+        assert np.isfinite(r) and s.shape == env.state_shape
+        i += 1
+    assert done and i < 1000
+    assert env.acc > 0.1 and env.n_flushes > 1
+    assert env.t_re < 0
+    # simulated event time never runs backwards, and the remaining
+    # budget tracks the event clock
+    dts = np.array(env.time_hist)
+    assert (dts >= 0).all()
+    assert env.t_re == pytest.approx(cfg.threshold_time - env.queue.now)
+
+
+def test_async_beats_sync_barrier_to_accuracy_target():
+    """Acceptance pin: with heterogeneous cn/us edges the event-driven
+    runtime reaches a fixed accuracy target in less simulated
+    wall-clock than the synchronous barrier at the same (γ1, γ2)."""
+    def time_to(h, target):
+        t = np.cumsum(h["time"])
+        hit = np.nonzero(np.array(h["acc"]) >= target)[0]
+        return float(t[hit[0]]) if len(hit) else np.inf
+
+    cfg = EnvConfig(task="mnist", mode="analytic", n_devices=20,
+                    n_edges=4, threshold_time=2000.0, seed=0,
+                    edge_regions=("cn", "cn", "us", "us"))
+    h_sync = sync.run_vanilla_hfl(HFLEnv(cfg), g1=4, g2=2)
+    h_async = sync.run_async_fedavg(
+        AsyncHFLEnv(cfg, AsyncConfig(buffer_k=2, decay="poly",
+                                     decay_a=0.5)), g1=4, g2=2)
+    t_s, t_a = time_to(h_sync, 0.6), time_to(h_async, 0.6)
+    assert np.isfinite(t_s) and np.isfinite(t_a)
+    assert t_a < t_s, (t_a, t_s)
+
+
+def test_async_env_real_rejects_mesh():
+    """The per-edge round is single-chip (ROADMAP open item): silently
+    accepting a mesh would gather the full bank onto one device, so the
+    constructor must refuse."""
+    from repro.launch import mesh as mesh_lib
+    cfg = EnvConfig(**dict(REAL_CFG, mesh=mesh_lib.make_bank_mesh(1)))
+    with pytest.raises(NotImplementedError):
+        AsyncHFLEnv(cfg, AsyncConfig(buffer_k=2))
+
+
+def test_async_scheme_registry_and_agent_loop():
+    """``async-fedavg`` is a registered scheme and the PPO agent trains
+    on the per-edge 2-dim action interface unchanged."""
+    assert "async-fedavg" in sync.SCHEMES
+    cfg = EnvConfig(task="mnist", mode="analytic", n_devices=20,
+                    n_edges=4, threshold_time=400.0, seed=0)
+    env = AsyncHFLEnv(cfg, AsyncConfig(buffer_k=2))
+    agent, log = sync.train_agent(env, episodes=1)
+    assert len(log.episode_rewards) == 1
+    h = sync.run_async_arena(env, agent)
+    assert h["rounds"] > 1 and h["final_acc"] > 0.05
+    h2 = sync.SCHEMES["async-fedavg"](
+        AsyncHFLEnv(cfg, AsyncConfig(buffer_k=2)), g1=3, g2=2)
+    assert h2["rounds"] > 1

@@ -1,0 +1,80 @@
+"""Direct coverage of the device/network heterogeneity models
+(``repro.sim.hardware``): sampling class balance, seed determinism,
+monotone cost-vs-interference behaviour (paper Fig. 3), and the
+cn-vs-us region gap (paper Fig. 4)."""
+import numpy as np
+import pytest
+
+from repro.sim import hardware
+
+
+def test_sample_usage_class_balance():
+    """Paper §4.1: usage classes 10–50%, n/5 devices per class."""
+    profiles = hardware.DeviceProfiles.sample(
+        np.random.default_rng(0), 50)
+    vals, counts = np.unique(profiles.cpu_usage, return_counts=True)
+    np.testing.assert_allclose(sorted(vals), [0.1, 0.2, 0.3, 0.4, 0.5])
+    assert (counts == 10).all()
+    # non-multiple device counts stay as balanced as possible
+    p2 = hardware.DeviceProfiles.sample(np.random.default_rng(0), 8)
+    _, c2 = np.unique(p2.cpu_usage, return_counts=True)
+    assert c2.max() - c2.min() <= 1 and c2.sum() == 8
+
+
+def test_sample_seed_determinism():
+    a = hardware.DeviceProfiles.sample(np.random.default_rng(7), 20)
+    b = hardware.DeviceProfiles.sample(np.random.default_rng(7), 20)
+    for f in ("cpu_usage", "freq", "flops", "profile_time",
+              "profile_energy"):
+        np.testing.assert_array_equal(getattr(a, f), getattr(b, f))
+    c = hardware.DeviceProfiles.sample(np.random.default_rng(8), 20)
+    assert (a.cpu_usage != c.cpu_usage).any() or \
+        (a.freq != c.freq).any()
+
+
+@pytest.mark.parametrize("task", ["mnist", "cifar"])
+def test_epoch_costs_monotone_in_cpu_usage(task):
+    """Fig. 3: mean per-epoch time and energy both rise with background
+    CPU usage (time ~ 1/(1-u), energy ~ 1 + 1.8u); avg over draws to
+    wash out the lognormal jitter."""
+    usage = np.array([0.1, 0.3, 0.5])
+    profiles = hardware.DeviceProfiles(
+        cpu_usage=usage, freq=np.ones(3), flops=np.ones(3),
+        profile_time=np.ones(3), profile_energy=np.ones(3), task=task)
+    rng = np.random.default_rng(0)
+    t = np.mean([profiles.epoch_time(rng) for _ in range(200)], axis=0)
+    e = np.mean([profiles.epoch_energy(rng) for _ in range(200)], axis=0)
+    assert t[0] < t[1] < t[2]
+    assert e[0] < e[1] < e[2]
+    base = hardware.TASK_BASE[task]
+    np.testing.assert_allclose(t, base["t"] / (1 - usage), rtol=0.12)
+    np.testing.assert_allclose(e, base["e"] * (1 + 1.8 * usage),
+                               rtol=0.12)
+    # cifar's bigger CNN costs more per epoch than mnist's at any usage
+    assert (hardware.TASK_BASE["cifar"]["t"]
+            > hardware.TASK_BASE["mnist"]["t"])
+
+
+def test_comm_region_gap_cn_slower_than_us():
+    """Fig. 4: Beijing->cloud uploads are much slower than
+    Washington D.C.->cloud (higher latency, lower bandwidth), and the
+    gap grows with model size (cifar > mnist)."""
+    rng = np.random.default_rng(0)
+    comm = hardware.CommModel(["cn", "us"], task="mnist")
+    ec = np.mean([comm.ec_time(rng) for _ in range(200)], axis=0)
+    assert ec[0] > 2 * ec[1]
+    comm_c = hardware.CommModel(["cn", "us"], task="cifar")
+    ec_c = np.mean([comm_c.ec_time(rng) for _ in range(200)], axis=0)
+    assert (ec_c > ec).all()          # bigger model, slower sync
+    # absolute gap widens with model size: bandwidth terms dominate
+    assert (ec_c[0] - ec_c[1]) > (ec[0] - ec[1])
+
+
+def test_de_time_is_milliseconds_scale():
+    """Device->edge LAN is ms-level (paper §2.3) — orders below the
+    edge->cloud WAN times."""
+    rng = np.random.default_rng(0)
+    comm = hardware.CommModel(["cn", "us", "us"])
+    de = comm.de_time(rng, 3)
+    assert de.shape == (3,)
+    assert (de >= 0.005).all() and (de <= 0.02).all()

@@ -202,6 +202,65 @@ def test_cloud_aggregate_sharded_and_fallback():
 
 
 # ---------------------------------------------------------------------------
+# staleness-weighted aggregation (async runtime flush) on the mesh path
+# ---------------------------------------------------------------------------
+
+@needs_mesh
+@pytest.mark.parametrize("shape", MESH_SHAPES)
+def test_staleness_flush_sharded_matches_oracle(shape):
+    """The async cloud flush is staleness folded into the weight vector
+    (repro.runtime.buffer), so the unchanged shard_map + psum path must
+    match the numpy staleness oracle and the single-chip flush on
+    1/2/4-shard and two-axis meshes."""
+    from repro.kernels import ref as ref_mod
+    from repro.runtime import StalenessBuffer
+    rng = np.random.default_rng(11)
+    k, p = 8, 130
+    vecs = [jnp.asarray(rng.normal(size=(p,)), jnp.float32)
+            for _ in range(k)]
+    w = np.asarray(rng.uniform(0.5, 2.0, size=k), np.float32)
+    tau = rng.integers(0, 4, size=k)
+
+    def fill(buf):
+        for j in range(k):
+            buf.push(j, vecs[j], float(w[j]), version=10 - int(tau[j]))
+        return buf
+
+    single, _ = fill(StalenessBuffer(k, decay="poly",
+                                     decay_a=0.5)).flush(version=10)
+    mesh = mesh_lib.make_bank_mesh(*shape)
+    sharded, info = fill(StalenessBuffer(
+        k, decay="poly", decay_a=0.5, mesh=mesh)).flush(version=10)
+    assert info["staleness"] == tau.tolist()
+    want = ref_mod.staleness_aggregate_ref(np.stack(vecs), w, tau,
+                                           decay="poly", a=0.5)
+    np.testing.assert_allclose(np.asarray(sharded), want, atol=1e-5,
+                               rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(sharded), np.asarray(single),
+                               atol=1e-5, rtol=1e-5)
+
+
+@needs_mesh
+def test_staleness_flush_indivisible_k_falls_back():
+    """K not divisible by the mesh -> the flush silently uses the
+    single-chip launch (the buffer is small; correctness first)."""
+    from repro.runtime import StalenessBuffer
+    rng = np.random.default_rng(12)
+    k, p = 5, 140
+    buf = StalenessBuffer(k, decay="none",
+                          mesh=mesh_lib.make_bank_mesh(4))   # 5 % 4 != 0
+    vecs = [jnp.asarray(rng.normal(size=(p,)), jnp.float32)
+            for _ in range(k)]
+    for j in range(k):
+        buf.push(j, vecs[j], 1.0 + j, version=0)
+    glob, _ = buf.flush(version=0)
+    want = ops.segment_agg(jnp.stack(vecs),
+                           jnp.asarray(np.arange(k) + 1.0, jnp.float32),
+                           jnp.zeros((k,), jnp.int32), 1)[0]
+    np.testing.assert_array_equal(np.asarray(glob), np.asarray(want))
+
+
+# ---------------------------------------------------------------------------
 # round-level parity (training on) + placement/donation contract
 # ---------------------------------------------------------------------------
 

@@ -8,19 +8,17 @@ from repro.sim import EnvConfig, HFLEnv
 
 @pytest.fixture(scope="module")
 def real_env():
+    # lr calibrated for the reduced CI scale (paper: 0.003 at 50
+    # devices x 1200 samples x 3000 s): 0.015 is the same
+    # reduced-scale training schedule benchmarks/common.small_real_cfg
+    # uses, and gains ~+0.4 accuracy within the threshold time here —
+    # this was the ROADMAP's 'pre-existing (seed) failure' calibration
     cfg = EnvConfig(task="mnist", mode="real", n_devices=8, n_edges=2,
                     n_local=96, batch_size=32, threshold_time=240.0,
-                    gamma_max=3, seed=0)
+                    gamma_max=3, seed=0, lr=0.015)
     return HFLEnv(cfg)
 
 
-@pytest.mark.xfail(
-    strict=False,
-    reason="pre-existing seed failure: the real-mode env does not gain "
-           "+0.15 accuracy within the threshold time at reduced CI "
-           "scale — needs training-schedule calibration, not "
-           "aggregation work (see ROADMAP 'Pre-existing (seed) "
-           "failure', verified at seed commit d1ded77)")
 def test_real_round_improves_accuracy(real_env):
     env = real_env
     env.reset()
