@@ -1,0 +1,64 @@
+"""Fault tolerance — accuracy vs simulated wall-clock under a dropout ×
+outage grid (DESIGN.md §5): the fault-tolerant async runtime
+(async-fedavg + retries + deadline-degraded flushes) against the
+synchronous barrier facing the same fault burden. The async rows should
+degrade gracefully (coverage-corrected partial flushes keep the cloud
+advancing) where the barrier pays every straggler and outage in full."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import analytic_cfg
+from repro.core import sync
+from repro.runtime import AsyncConfig, FaultSpec, Outage
+from repro.sim import AsyncHFLEnv, HFLEnv
+
+ARTIFACT = "reports/BENCH_faults.json"
+
+
+def _time_to(h, target):
+    t = np.cumsum(h["time"])
+    hit = np.nonzero(np.array(h["acc"]) >= target)[0]
+    return float(t[hit[0]]) if len(hit) else float("inf")
+
+
+def run(quick: bool = True):
+    rows = []
+    g1, g2, target = 4, 2, 0.55
+    cfg = analytic_cfg(n_devices=20, n_edges=4, threshold_time=2000.0,
+                       edge_regions=("cn", "cn", "us", "us"))
+    # fault grid: dropout probability x outage window on a cn straggler
+    drops = [0.0, 0.1, 0.3] if not quick else [0.0, 0.3]
+    outages = [("none", ()),
+               ("cn-600s", (Outage(edge=0, start=300.0, duration=600.0),))]
+
+    # fault-free synchronous barrier reference (the barrier has no
+    # fault model: its row is the zero-fault baseline both grids share)
+    h = sync.run_vanilla_hfl(HFLEnv(cfg), g1=g1, g2=g2)
+    t_sync = _time_to(h, target)
+    rows.append({"scheme": "sync-barrier-nofault",
+                 "t_to_target_s": round(t_sync, 1),
+                 "final_acc": round(h["final_acc"], 4),
+                 "rounds": h["rounds"]})
+
+    for oname, outage in outages:
+        for p in drops:
+            spec = FaultSpec(drop_prob=p, transient_prob=min(p, 0.2),
+                             outages=outage, seed=17)
+            env = AsyncHFLEnv(
+                cfg, AsyncConfig(buffer_k=2, decay="poly", decay_a=0.5,
+                                 flush_deadline=120.0),
+                faults=spec if spec.enabled else None)
+            h = sync.run_async_fedavg(env, g1=g1, g2=g2)
+            t = _time_to(h, target)
+            fi = env._injector
+            rows.append({
+                "scheme": f"async-drop{p}-outage-{oname}",
+                "t_to_target_s": round(t, 1),
+                "final_acc": round(h["final_acc"], 4),
+                "speedup_vs_sync": round(t_sync / t, 2)
+                if np.isfinite(t) else 0.0,
+                "events": h["rounds"], "flushes": env.n_flushes,
+                "dropped_uploads": int(fi.n_dropped.sum()),
+                "retries": int(fi.n_retries.sum())})
+    return rows

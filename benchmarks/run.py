@@ -27,6 +27,7 @@ BENCHES = [
     "fig11_noniid",
     "fig12_pca",
     "fig13_async",
+    "fig_faults",
     "table2_enhancement",
     "kernels_bench",
     "roofline",
@@ -57,6 +58,7 @@ def main() -> None:
         if artifact:
             # per-module perf artifact (e.g. BENCH_kernels.json) so the
             # hot-path trajectory is recorded per commit
+            os.makedirs(os.path.dirname(artifact) or ".", exist_ok=True)
             with open(artifact, "w") as f:
                 json.dump(rows, f, indent=1)
         for r in rows:

@@ -13,6 +13,11 @@
 #                                edge-round parity, hardware models) —
 #                                a fast loop for runtime work; the
 #                                plain `test` tier runs these too
+#   scripts/ci.sh test-faults    fault-tolerance slice: deterministic
+#                                fault injection + retry/backoff +
+#                                degraded flushes (tests/test_faults.py)
+#                                and the crash-recovery kill/resume
+#                                harness (tests/test_recovery.py)
 #   scripts/ci.sh bench          kernels_bench + regression gate vs the
 #                                committed BENCH_kernels.json (>20%
 #                                kernel/oracle regression fails;
@@ -27,7 +32,9 @@ export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
 
 cmd="${1:-test}"
 # consume the subcommand word only if one was actually given
-case "${1:-}" in lint|test|test-sharded|test-runtime|bench) shift ;; esac
+case "${1:-}" in
+  lint|test|test-sharded|test-runtime|test-faults|bench) shift ;;
+esac
 case "$cmd" in
   lint)
     python scripts/lint.py
@@ -42,6 +49,10 @@ case "$cmd" in
   test-runtime)
     python -m pytest -x -q tests/test_async_runtime.py \
       tests/test_hardware.py "$@"
+    ;;
+  test-faults)
+    python -m pytest -x -q tests/test_faults.py \
+      tests/test_recovery.py "$@"
     ;;
   bench)
     python scripts/bench_gate.py

@@ -1,10 +1,24 @@
-"""Minimal npz-based pytree checkpointing (server model + agent state).
+"""Minimal npz-based pytree checkpointing (server model + agent state),
+plus **full async-runtime crash recovery** (``save_runtime`` /
+``load_runtime``).
 
 Leaves are flattened with ``jax.tree_util`` key paths as npz keys, so any
 nested dict/tuple pytree round-trips exactly (structure file alongside).
+
+The runtime snapshot captures *everything* the event-driven simulator
+needs to resume bitwise mid-stream: the pending event queue (times, seq
+counter, payloads incl. model snapshots and round costs), the staleness
+buffer contents, staleness counters, the flat model bank, every RNG
+(the env's numpy generator, the JAX key chain, the fault injector's
+dedicated generator), and the fault bookkeeping — so a killed
+``run_async_fedavg`` / ``run_async_arena`` resumes and converges to the
+same final model as an uninterrupted run (tests/test_recovery.py).
+Arrays go to ``<path>.npz``; scalars/structure to ``<path>.json``
+(Python's JSON float repr round-trips IEEE doubles exactly).
 """
 from __future__ import annotations
 
+import dataclasses
 import json
 import os
 from typing import Any
@@ -52,3 +66,212 @@ def load_pytree(template: Any, path: str) -> Any:
         arr = data[_key_str(p)]
         new.append(jax.numpy.asarray(arr, dtype=v.dtype))
     return jax.tree.unflatten(jax.tree.structure(template), new)
+
+
+# ---------------------------------------------------------------------------
+# full async-runtime crash recovery (AsyncHFLEnv)
+# ---------------------------------------------------------------------------
+
+def _enc_val(v, arrays: dict, key: str):
+    """JSON-encode one event-payload / slot-meta value; arrays spill to
+    the npz side under ``key`` and leave a reference behind."""
+    from repro.runtime.clock import RoundCost
+    if isinstance(v, RoundCost):
+        return {"__cost__": {k: float(x) for k, x in
+                             dataclasses.asdict(v).items()}}
+    if v is None or isinstance(v, (bool, str)):
+        return v
+    if isinstance(v, (int, np.integer)):
+        return int(v)
+    if isinstance(v, (float, np.floating)):
+        return float(v)
+    if hasattr(v, "shape"):
+        arrays[key] = _to_np(v)
+        return {"__arr__": key}
+    raise TypeError(f"cannot checkpoint payload value of type {type(v)!r}")
+
+
+def _dec_val(v, data):
+    from repro.runtime.clock import RoundCost
+    if isinstance(v, dict) and "__cost__" in v:
+        return RoundCost(**v["__cost__"])
+    if isinstance(v, dict) and "__arr__" in v:
+        return jax.numpy.asarray(data[v["__arr__"]])
+    return v
+
+
+def _enc_map(d: dict, arrays: dict, prefix: str) -> dict:
+    return {k: _enc_val(v, arrays, f"{prefix}/{k}") for k, v in d.items()}
+
+
+def _dec_map(d: dict, data) -> dict:
+    return {k: _dec_val(v, data) for k, v in d.items()}
+
+
+def save_runtime(env, path: str) -> None:
+    """Snapshot the complete state of a running ``AsyncHFLEnv`` so a
+    killed process can resume mid-stream (``load_runtime``) and converge
+    to the same final model as an uninterrupted run.
+
+    Captured: pending event queue (wall clock, seq counter, every
+    payload — round costs and model snapshots included), staleness
+    buffer slots, model bank / edge matrix / global vector / PCA state
+    (real mode), analytic accuracy state, all histories and counters,
+    the env's numpy generator, the JAX key chain, and the fault
+    injector's full state (its dedicated generator, outage/alive flags,
+    drop/retry statistics, incarnation counters).
+    """
+    cfg = env.cfg
+    arrays: dict = {}
+    meta: dict = {
+        "cfg": {"task": cfg.task, "mode": cfg.mode,
+                "n_devices": cfg.n_devices, "n_edges": cfg.n_edges,
+                "seed": cfg.seed, "threshold_time": cfg.threshold_time},
+        "version": int(env.version), "k": int(env.k),
+        "t_re": float(env.t_re), "acc": float(env.acc),
+        "total_energy": float(env.total_energy),
+        "episode": int(env.episode), "n_flushes": int(env.n_flushes),
+        "deciding": -1 if env._deciding is None else int(env._deciding),
+        "last_time": float(env._last_time),
+        "last_flush_time": float(env._last_flush_time),
+        "last_upload_lost": bool(env._last_upload_lost),
+        "flushed": bool(getattr(env, "_flushed", False)),
+        "energy_hist": [float(x) for x in env.energy_hist],
+        "acc_hist": [float(x) for x in env.acc_hist],
+        "time_hist": [float(x) for x in env.time_hist],
+        "last_action": [[int(g1), int(g2)]
+                        for g1, g2 in env._last_action],
+        "incarnation": [int(x) for x in env._incarnation],
+        "rng": env.rng.bit_generator.state,
+        "injector": env._injector.state(),
+        "queue": {"now": float(env.queue.now), "seq": int(env.queue._seq),
+                  "events": [
+                      {"time": float(ev.time), "seq": int(ev.seq),
+                       "edge": int(ev.edge), "kind": ev.kind,
+                       "payload": _enc_map(ev.payload, arrays, f"q/{i}")}
+                      for i, ev in enumerate(env.queue.events())]},
+        "buffer": {"arrivals": int(env.buffer._arrivals),
+                   "slots": [
+                       {"edge": int(s.edge), "weight": float(s.weight),
+                        "version": int(s.version),
+                        "arrival": int(s.arrival),
+                        "has_vec": s.vec is not None,
+                        "meta": _enc_map(s.meta, arrays, f"buf/{i}/meta")}
+                       for i, s in enumerate(env.buffer._slots)]},
+    }
+    for i, s in enumerate(env.buffer._slots):
+        if s.vec is not None:
+            arrays[f"buf/{i}/vec"] = _to_np(s.vec)
+    arrays["key"] = np.asarray(env._key)
+    arrays["abase"] = np.asarray(env._abase)
+    arrays["h_edges"] = np.asarray(env._h_edges)
+    arrays["edge_version"] = np.asarray(env._edge_version)
+    arrays["staleness"] = np.asarray(env._staleness)
+    arrays["in_flight"] = np.asarray(env._in_flight, np.uint8)
+    arrays["edge_assign"] = np.asarray(env.edge_assign)
+    arrays["edge_sizes"] = np.asarray(env._edge_sizes)
+    arrays["edge_w"] = np.asarray(env._edge_w)
+    # device profiles: cpu_usage mutates under device mobility
+    arrays["cpu_usage"] = np.asarray(env.profiles.cpu_usage)
+    arrays["freq"] = np.asarray(env.profiles.freq)
+    if cfg.mode == "real":
+        arrays["global_vec"] = _to_np(env._global_vec)
+        arrays["edge_mat"] = _to_np(env._edge_mat)
+        for p, v in jax.tree_util.tree_flatten_with_path(env.bank)[0]:
+            arrays[f"bank/{_key_str(p)}"] = _to_np(v)
+    else:
+        arrays["edge_acc"] = np.asarray(env._edge_acc)
+    for p, v in jax.tree_util.tree_flatten_with_path(env.pca_state)[0]:
+        arrays[f"pca/{_key_str(p)}"] = _to_np(v)
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    np.savez(path + ".npz", **arrays)
+    with open(path + ".json", "w") as f:
+        json.dump(meta, f)
+
+
+def load_runtime(env, path: str) -> None:
+    """Restore a ``save_runtime`` snapshot into a *fresh*
+    ``AsyncHFLEnv`` constructed with the same config and fault spec.
+    Calls ``env.reset()`` first (building compiled functions and data),
+    then overwrites every piece of mutable runtime state, so the next
+    ``step`` continues the interrupted trajectory exactly."""
+    from repro.runtime.clock import Event
+    import jax.numpy as jnp
+    with open(path + ".json") as f:
+        meta = json.load(f)
+    data = np.load(path + ".npz")
+    cfg = env.cfg
+    for k, v in meta["cfg"].items():
+        if getattr(cfg, k) != v:
+            raise ValueError(
+                f"checkpoint/config mismatch on {k!r}: saved {v!r}, "
+                f"env has {getattr(cfg, k)!r}")
+    env.reset()
+    # --- counters / histories ------------------------------------------
+    env.version = meta["version"]
+    env.k = meta["k"]
+    env.t_re = meta["t_re"]
+    env.acc = meta["acc"]
+    env.total_energy = meta["total_energy"]
+    env.episode = meta["episode"]
+    env.n_flushes = meta["n_flushes"]
+    env._deciding = None if meta["deciding"] < 0 else meta["deciding"]
+    env._last_time = meta["last_time"]
+    env._last_flush_time = meta["last_flush_time"]
+    env._last_upload_lost = meta["last_upload_lost"]
+    env._flushed = meta["flushed"]
+    env.energy_hist = list(meta["energy_hist"])
+    env.acc_hist = list(meta["acc_hist"])
+    env.time_hist = list(meta["time_hist"])
+    env._last_action = [(g1, g2) for g1, g2 in meta["last_action"]]
+    env._incarnation = np.asarray(meta["incarnation"], np.int64)
+    # --- RNGs (numpy generator, JAX key chain, fault injector) ---------
+    env.rng.bit_generator.state = meta["rng"]
+    env._injector.set_state(meta["injector"])
+    env._key = jnp.asarray(data["key"])
+    env._abase = jnp.asarray(data["abase"])
+    # --- topology / hardware -------------------------------------------
+    env.edge_assign = np.asarray(data["edge_assign"])
+    env._edge_assign_j = jnp.asarray(env.edge_assign)
+    env._edge_sizes = np.asarray(data["edge_sizes"])
+    env._edge_w = np.asarray(data["edge_w"])
+    env.profiles.cpu_usage = np.asarray(data["cpu_usage"])
+    env.profiles.freq = np.asarray(data["freq"])
+    # --- per-edge runtime arrays ---------------------------------------
+    env._h_edges = np.asarray(data["h_edges"])
+    env._edge_version = np.asarray(data["edge_version"])
+    env._staleness = np.asarray(data["staleness"])
+    env._in_flight = np.asarray(data["in_flight"]).astype(bool)
+    # --- models ---------------------------------------------------------
+    if cfg.mode == "real":
+        env._global_vec = jnp.asarray(data["global_vec"])
+        env._edge_mat = jnp.asarray(data["edge_mat"])
+        env.global_model = env._spec.unflatten_model(env._global_vec)
+        env.edge_models = env._spec.unflatten(env._edge_mat)
+        leaves_t = jax.tree_util.tree_flatten_with_path(env.bank)[0]
+        new = [jnp.asarray(data[f"bank/{_key_str(p)}"], dtype=v.dtype)
+               for p, v in leaves_t]
+        env.bank = jax.tree.unflatten(jax.tree.structure(env.bank), new)
+    else:
+        env._edge_acc = np.asarray(data["edge_acc"])
+    leaves_t = jax.tree_util.tree_flatten_with_path(env.pca_state)[0]
+    new = [jnp.asarray(data[f"pca/{_key_str(p)}"], dtype=v.dtype)
+           for p, v in leaves_t]
+    env.pca_state = jax.tree.unflatten(
+        jax.tree.structure(env.pca_state), new)
+    # --- staleness buffer ----------------------------------------------
+    from repro.runtime.buffer import _Slot
+    env.buffer._arrivals = meta["buffer"]["arrivals"]
+    env.buffer._slots = [
+        _Slot(edge=sl["edge"],
+              vec=(jnp.asarray(data[f"buf/{i}/vec"])
+                   if sl["has_vec"] else None),
+              weight=sl["weight"], version=sl["version"],
+              arrival=sl["arrival"], meta=_dec_map(sl["meta"], data))
+        for i, sl in enumerate(meta["buffer"]["slots"])]
+    # --- event queue ----------------------------------------------------
+    q = meta["queue"]
+    env.queue.load(q["now"], q["seq"], [
+        Event(time=e["time"], seq=e["seq"], edge=e["edge"], kind=e["kind"],
+              payload=_dec_map(e["payload"], data))
+        for e in q["events"]])

@@ -176,6 +176,24 @@ def cloud_aggregate(edge_models, edge_sizes, mesh=None):
     return spec.unflatten_model(out[0])
 
 
+def masked_resync(edge_mat, bank_mat, edge_assign, alive):
+    """Fault-tolerant edge→device resync: broadcast the ``(E, P)`` edge
+    matrix to the ``(N, P)`` bank through ``segment_broadcast``, but
+    only onto rows of *alive* edges — rows belonging to dropped /
+    departed edges come back **bit-identical** (their devices are
+    offline; overwriting their in-flight state would corrupt a later
+    rejoin). ``alive``: (E,) bool. With ``alive`` all-True this is
+    exactly the plain resync.
+
+    Used by the async runtime's churn handling (a rejoining edge's rows
+    sync to the current global model while every other row stays put)
+    and available to degraded synchronous rounds."""
+    out = ops.segment_broadcast(edge_mat, edge_assign,
+                                out_dtype=bank_mat.dtype)
+    keep = jnp.asarray(alive, bool)[edge_assign]
+    return jnp.where(keep[:, None], out, bank_mat)
+
+
 # ---------------------------------------------------------------------------
 # device-local training (vmapped SGD epochs)
 # ---------------------------------------------------------------------------

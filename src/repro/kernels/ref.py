@@ -86,6 +86,34 @@ def staleness_aggregate_ref(updates, weights, tau, decay: str = "poly",
     return (w[:, None] * u).sum(0) / max(float(w.sum()), 1e-9)
 
 
+def coverage_aggregate_ref(updates, weights, tau, anchor,
+                           anchor_weight: float, decay: str = "poly",
+                           a: float = 0.5):
+    """Numpy oracle for the *degraded* (coverage-corrected) async cloud
+    flush: ``(K', P)`` surviving updates x ``(K',)`` base weights x
+    ``(K',)`` staleness, plus the current global vector ``anchor``
+    standing in for the missing data mass ``anchor_weight``:
+
+        v_j = w_j s(tau_j),  m = anchor_weight
+        out = (sum_j v_j u_j + m·g) / max(sum_j v_j + m, 1e-9)
+            = c·survivor_mean + (1-c)·g,   c = sum v / (sum v + m)
+
+    i.e. each missing slot is a phantom zero-movement update equal to
+    the old global model — the correction folds into the weight vector
+    of the ordinary weighted mean, exactly like the staleness decay,
+    so the fused ``segment_agg`` kernel (sharded path included) serves
+    the degraded flush unchanged
+    (``repro.runtime.buffer.StalenessBuffer.flush(anchor=...)``).
+    With ``anchor_weight == 0`` this reduces to
+    ``staleness_aggregate_ref``."""
+    u = np.asarray(updates, np.float32)
+    g = np.asarray(anchor, np.float32)
+    v = np.asarray(weights, np.float32) * staleness_scale_ref(tau, decay, a)
+    m = np.float32(anchor_weight)
+    num = (v[:, None] * u).sum(0) + m * g
+    return num / max(float(v.sum() + m), 1e-9)
+
+
 def weighted_aggregate_ref(bank, weights, segment_ids, num_segments: int):
     """The per-leaf tree path (the pre-flat-bank ``hfl`` hot loop):
     bank leaves (N, ...) -> pytree with leading ``num_segments`` axis,

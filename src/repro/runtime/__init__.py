@@ -12,12 +12,22 @@ Replaces the lockstep cloud barrier (``t_use = t_edge.max()`` in
   single-chip and sharded (``shard_map``) aggregation paths both work
   unchanged.
 
+* ``repro.runtime.faults`` — deterministic fault injection: a seeded,
+  declarative ``FaultSpec`` (per-edge dropout, transient upload
+  failures, edge-outage windows, join/leave churn) whose events enter
+  the same deterministic queue; retries are priced with capped
+  exponential backoff + fresh comm-model draws. A null spec reproduces
+  the fault-free runtime bitwise (DESIGN.md §5).
+
 ``repro.sim.env.AsyncHFLEnv`` drives both from the DRL loop (one env
 step = one edge upload event); ``repro.core.sync.run_async_fedavg`` /
-``run_async_arena`` are the matching schemes. Design notes: DESIGN.md
-§Async runtime.
+``run_async_arena`` are the matching schemes. Crash recovery for the
+whole runtime state lives in ``repro.checkpoint.store.save_runtime`` /
+``load_runtime``. Design notes: DESIGN.md §4–5.
 """
 from repro.runtime.clock import (  # noqa: F401
     Event, EventQueue, RoundCost, edge_round_cost)
 from repro.runtime.buffer import (  # noqa: F401
     AsyncConfig, StalenessBuffer, staleness_scale)
+from repro.runtime.faults import (  # noqa: F401
+    ChurnEvent, FaultInjector, FaultSpec, Outage)

@@ -38,6 +38,11 @@ class AsyncConfig:
     decay: str = "poly"          # none | poly | exp   (s(tau) family)
     decay_a: float = 0.5         # poly: (1+tau)^-a ; exp: a^tau
     max_staleness: int = 0       # drop updates older than this (0 = keep)
+    flush_deadline: float = 0.0  # graceful degradation: if K has not
+                                 # been met this many simulated seconds
+                                 # after the last flush, flush the
+                                 # survivors with coverage-corrected
+                                 # weights (0 = wait for K forever)
 
 
 def staleness_scale(tau, decay: str = "poly", a: float = 0.5):
@@ -108,7 +113,8 @@ class StalenessBuffer:
                                  arrival=self._arrivals, meta=meta))
         self._arrivals += 1
 
-    def flush(self, version: int, max_staleness: int = 0):
+    def flush(self, version: int, max_staleness: int = 0, anchor=None,
+              anchor_weight: float = 0.0):
         """Aggregate the buffered updates against global ``version``.
 
         Returns ``(global_vec (P,) f32, info)``; ``info`` carries the
@@ -116,6 +122,21 @@ class StalenessBuffer:
         staler than ``max_staleness`` (when > 0) are dropped *before*
         aggregation; if every update is dropped, returns ``(None, info)``
         and the buffer still empties.
+
+        **Degraded (coverage-corrected) flush**: when the capacity K
+        cannot be met (dropped uploads / a flush deadline), pass the
+        current global vector as ``anchor`` with the missing data mass
+        as ``anchor_weight`` — the anchor joins the stack as one extra
+        zero-movement row, so the correction *folds into the weight
+        vector* exactly like the staleness decay does:
+
+            out = (Σ_j w_j s(τ_j) u_j + m·g) / (Σ_j w_j s(τ_j) + m)
+                = c·survivor_mean + (1-c)·g,   c = Σv / (Σv + m)
+
+        — still one fused ``segment_agg`` launch (sharded path
+        included). Numpy oracle: ``ref.coverage_aggregate_ref``. With
+        ``anchor=None`` (the default) the code path is byte-identical
+        to the fault-free flush.
         """
         slots = sorted(self._slots, key=lambda s: (s.edge, s.arrival))
         self._slots = []
@@ -133,15 +154,23 @@ class StalenessBuffer:
         if not slots:
             return None, info
         scale = staleness_scale(tau, self.decay, self.decay_a)
-        w = jnp.asarray(
-            np.array([s.weight for s in slots], np.float32) * scale)
-        info["weights"] = np.asarray(w).tolist()
+        w = np.array([s.weight for s in slots], np.float32) * scale
+        info["weights"] = w.tolist()
+        degraded = anchor is not None and anchor_weight > 0.0
+        if degraded:
+            info["anchor_weight"] = float(anchor_weight)
+            info["coverage"] = float(w.sum()
+                                     / (w.sum() + float(anchor_weight)))
         if any(s.vec is None for s in slots):
             # metadata-only mode (the analytic env): weights/staleness
             # bookkeeping without a model update to aggregate
             return None, info
-        stack = jnp.stack([jnp.asarray(s.vec) for s in slots])
-        glob = _aggregate(stack, w, self.mesh)
+        vecs = [jnp.asarray(s.vec) for s in slots]
+        if degraded:
+            vecs.append(jnp.asarray(anchor, vecs[0].dtype))
+            w = np.concatenate([w, np.float32([anchor_weight])])
+        stack = jnp.stack(vecs)
+        glob = _aggregate(stack, jnp.asarray(w), self.mesh)
         return glob, info
 
 

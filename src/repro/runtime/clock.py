@@ -59,6 +59,13 @@ class EventQueue:
         heapq.heappush(self._heap, ev)
         return ev
 
+    def schedule_at(self, time: float, edge: int, kind: str = "upload",
+                    **payload) -> Event:
+        """Schedule ``kind`` at absolute simulated ``time`` (>= now) —
+        the entry point for pre-declared fault windows
+        (``repro.runtime.faults``)."""
+        return self.schedule(float(time) - self.now, edge, kind, **payload)
+
     def peek(self) -> Optional[Event]:
         return self._heap[0] if self._heap else None
 
@@ -69,6 +76,24 @@ class EventQueue:
         ev = heapq.heappop(self._heap)
         self.now = ev.time
         return ev
+
+    # ------------------------------------------------------------------
+    # crash-recovery support (repro.checkpoint.store.save_runtime)
+    # ------------------------------------------------------------------
+    def events(self) -> list:
+        """Pending events in deterministic (time, seq) order — a copy;
+        the heap is untouched."""
+        return sorted(self._heap)
+
+    def load(self, now: float, seq: int, events) -> None:
+        """Rebuild the queue from a checkpoint: pending ``events``
+        (each an :class:`Event`), wall clock ``now``, and the monotone
+        sequence counter ``seq`` — so resumed runs keep the exact
+        (time, seq) ordering and tie-breaks of the interrupted run."""
+        self._heap = list(events)
+        heapq.heapify(self._heap)
+        self._seq = int(seq)
+        self.now = float(now)
 
 
 @dataclasses.dataclass

@@ -377,13 +377,27 @@ class AsyncHFLEnv(HFLEnv):
     One env **step = one upload event**: the action ``(γ1, γ2)``
     programs the *next* round of the edge whose upload was just
     processed, so the agent acts per edge at upload events rather than
-    per global round (action_dim == 2). The observation appends three
+    per global round (action_dim == 2). The observation appends six
     columns to the synchronous state: per-edge staleness, in-flight
-    status, and a deciding-edge one-hot (row 0 carries the buffer fill
-    fraction).
+    status, a deciding-edge one-hot (row 0 carries the buffer fill
+    fraction), and — for the fault model — dropped-upload counts,
+    pending-retry attempts, and an outage/departed status flag, so the
+    DRL agent can learn around faults.
+
+    **Fault tolerance** (``repro.runtime.faults``; DESIGN.md §5): pass
+    a :class:`FaultSpec` to inject per-edge upload dropout, transient
+    failures with capped-exponential-backoff retries, edge-outage
+    windows, and join/leave churn — all as first-class events on the
+    same deterministic queue. ``AsyncConfig.flush_deadline`` adds
+    graceful degradation: a buffer that cannot reach K in time flushes
+    the survivors with coverage-corrected weights (the current global
+    vector anchors the missing mass; ``ref.coverage_aggregate_ref``).
+    A null/omitted spec reproduces the fault-free runtime **bitwise**.
+    Crash recovery: ``repro.checkpoint.store.save_runtime`` /
+    ``load_runtime`` snapshot and restore the full runtime state.
     """
 
-    def __init__(self, cfg: EnvConfig, async_cfg=None):
+    def __init__(self, cfg: EnvConfig, async_cfg=None, faults=None):
         from repro.runtime import AsyncConfig
         if cfg.mode == "real" and cfg.mesh is not None:
             # make_edge_round is single-chip: running it over a
@@ -398,6 +412,7 @@ class AsyncHFLEnv(HFLEnv):
         super().__init__(cfg)
         self.acfg = async_cfg or AsyncConfig()
         self.buffer_k = self.acfg.buffer_k or cfg.n_edges
+        self.faults = faults
         if cfg.mode == "real":
             self._edge_round = hfl.make_edge_round(
                 self._loss_fn, cfg.lr, cfg.batch_size, cfg.n_edges,
@@ -406,7 +421,7 @@ class AsyncHFLEnv(HFLEnv):
     # ------------------------------------------------------------------
     def reset(self) -> np.ndarray:
         from repro.core import flatbank
-        from repro.runtime import EventQueue, StalenessBuffer
+        from repro.runtime import EventQueue, FaultInjector, StalenessBuffer
         cfg = self.cfg
         m = cfg.n_edges
         # placeholders: the superclass warmup round builds a state
@@ -415,6 +430,13 @@ class AsyncHFLEnv(HFLEnv):
         self._deciding = None
         self._in_flight = np.zeros(m, bool)
         self._staleness = np.zeros(m, np.float32)
+        # per-episode fault state: its dedicated generator folds the
+        # episode index in so PPO episodes see varied fault traces while
+        # a fresh env stays bitwise-reproducible run to run
+        self._injector = FaultInjector(self.faults, m,
+                                       seed_offset=self.episode)
+        self._incarnation = np.zeros(m, np.int64)
+        self._last_action = [(2, 2)] * m
         super().reset()                 # sync warmup round + PCA fit
         self.version = 0
         self._abase = self._next_key()  # generation keys: fold_in(abase, v)
@@ -436,36 +458,144 @@ class AsyncHFLEnv(HFLEnv):
         self.n_flushes = 0
         self._edge_version = np.zeros(m, np.int64)
         self._last_time = self.queue.now
+        self._last_flush_time = self.queue.now
+        self._last_upload_lost = False
+        self._flush_info = None
+        # declared faults (outage windows, churn) become first-class
+        # events on the same deterministic queue; a null spec schedules
+        # nothing, keeping the event trace bitwise-identical
+        self._injector.schedule_initial(self.queue)
         g0 = np.full(2, 2, np.int64)    # warmup frequencies (Alg. 1 l.3)
         for j in range(m):
             self._launch_round(j, int(g0[0]), int(g0[1]))
         ev = self._process_upload()     # first upload picks first decider
-        self._deciding = ev.edge
+        if ev is not None:
+            self._deciding = ev.edge
         return self._state()
 
     # ------------------------------------------------------------------
     def _launch_round(self, edge: int, g1: int, g2: int) -> None:
         """Edge downloads the current global model and starts a
         (γ1, γ2) round now; its upload lands after the simulated
-        per-edge duration."""
+        per-edge duration. Departed edges stay dormant until a join
+        event relaunches them."""
         from repro.runtime import edge_round_cost
+        if not self._injector.alive[edge]:
+            return
+        self._last_action[edge] = (int(g1), int(g2))
         cost = edge_round_cost(self.profiles, self.comm, self.edge_assign,
                                edge, g1, g2, self.rng)
         snapshot = self._global_vec if self.cfg.mode == "real" else None
         self.queue.schedule(cost.time, edge, kind="upload",
                             g1=g1, g2=g2, cost=cost, version=self.version,
-                            snapshot=snapshot)
+                            snapshot=snapshot,
+                            incarnation=int(self._incarnation[edge]))
         self._edge_version[edge] = self.version
         self._in_flight[edge] = True
 
-    def _process_upload(self):
-        """Pop the next upload event, realize its training, buffer the
-        update, and flush the cloud when the buffer fills."""
-        cfg = self.cfg
-        ev = self.queue.pop()
-        j, pay, cost = ev.edge, ev.payload, ev.payload["cost"]
+    # ------------------------------------------------------------------
+    # fault-event handlers (repro.runtime.faults)
+    # ------------------------------------------------------------------
+    def _handle_leave(self, j: int) -> None:
+        """Mobility churn: edge ``j`` departs. Its in-flight round is
+        voided (the incarnation bump makes the pending upload a ghost);
+        its bank rows stay bit-identical until it rejoins."""
+        fi = self._injector
+        if not fi.alive[j]:
+            return
+        fi.alive[j] = False
+        fi.retry_pending[j] = 0
+        self._incarnation[j] += 1
         self._in_flight[j] = False
-        if cfg.mode == "real":
+
+    def _handle_join(self, j: int) -> None:
+        """Mobility churn: edge ``j`` (re)joins. Real mode resyncs only
+        the joining edge's bank rows to the current global model
+        (``hfl.masked_resync`` — every other row comes back
+        bit-identical), then the edge relaunches with its last
+        programmed frequencies."""
+        fi = self._injector
+        if fi.alive[j]:
+            return
+        fi.alive[j] = True
+        self._incarnation[j] += 1
+        if self.cfg.mode == "real":
+            self._edge_mat = self._edge_mat.at[j].set(
+                self._global_vec.astype(self._edge_mat.dtype))
+            alive_1h = np.zeros(self.cfg.n_edges, bool)
+            alive_1h[j] = True
+            mat = hfl.masked_resync(self._edge_mat,
+                                    self._spec.flatten(self.bank),
+                                    self._edge_assign_j,
+                                    jnp.asarray(alive_1h))
+            self.bank = self._spec.unflatten(mat)
+            self.edge_models = self._spec.unflatten(self._edge_mat)
+        self._edge_version[j] = self.version
+        g1, g2 = self._last_action[j]
+        self._launch_round(j, g1, g2)
+
+    def _maybe_deadline_flush(self) -> None:
+        """Graceful degradation: if K has not been met within the flush
+        deadline, proceed with the survivors (coverage-corrected)."""
+        dl = self.acfg.flush_deadline
+        if dl > 0 and len(self.buffer) > 0 and not self.buffer.ready \
+                and self.queue.now - self._last_flush_time >= dl:
+            self._flush(degraded=True)
+
+    def _process_upload(self):
+        """Pop events until one upload lands (or is permanently
+        dropped): fault events (outage boundaries, churn, retries) are
+        handled transparently in between. Realizes the landed upload's
+        training, buffers the update, and flushes the cloud when the
+        buffer fills (or the flush deadline lapses). Returns ``None``
+        iff the queue drained (every edge departed)."""
+        cfg = self.cfg
+        fi = self._injector
+        while True:
+            if not len(self.queue):
+                return None
+            ev = self.queue.pop()
+            kind = ev.kind
+            if kind == "outage_start":
+                fi.in_outage[ev.edge] = True
+            elif kind == "outage_end":
+                fi.in_outage[ev.edge] = False
+            elif kind == "leave":
+                self._handle_leave(ev.edge)
+            elif kind == "join":
+                self._handle_join(ev.edge)
+            else:                                   # an upload attempt
+                pay = ev.payload
+                if pay.get("incarnation", 0) \
+                        != int(self._incarnation[ev.edge]):
+                    continue    # ghost: the edge departed mid-round
+                attempt = pay.get("attempt", 0)
+                first = pay.get("first_try", ev.time)
+                fate = fi.upload_fate(ev.edge, attempt, ev.time, first)
+                if fate == "retry":
+                    fi.retry_pending[ev.edge] = attempt + 1
+                    # capped exponential backoff + a fresh comm-model
+                    # upload draw prices the retry
+                    self.queue.schedule(
+                        fi.retry_delay(self.comm, ev.edge, attempt),
+                        ev.edge, kind="upload",
+                        **{**pay, "attempt": attempt + 1,
+                           "first_try": first})
+                    self._maybe_deadline_flush()
+                    continue
+                fi.retry_pending[ev.edge] = 0
+                break
+            self._maybe_deadline_flush()
+        j, pay, cost = ev.edge, ev.payload, ev.payload["cost"]
+        lost = fate == "drop"
+        self._in_flight[j] = False
+        if lost:
+            # the round's compute (and energy) is spent, but the update
+            # never reaches the cloud: nothing is buffered and in real
+            # mode the edge round is not realized (the device state was
+            # lost mid-round; its bank rows keep their previous values)
+            pass
+        elif cfg.mode == "real":
             key = jax.random.fold_in(self._abase, pay["version"])
             self.bank, edge_vec = self._edge_round(
                 self.bank, self.fed.x, self.fed.y, self._dev_sizes,
@@ -486,6 +616,8 @@ class AsyncHFLEnv(HFLEnv):
         self._flushed = False
         if self.buffer.ready:
             self._flush()
+        else:
+            self._maybe_deadline_flush()
         self._staleness = np.float32(self.version - self._edge_version)
         dt = self.queue.now - self._last_time
         self._last_time = self.queue.now
@@ -493,14 +625,28 @@ class AsyncHFLEnv(HFLEnv):
         self.energy_hist.append(cost.energy)
         self.acc_hist.append(self.acc)
         self.time_hist.append(dt)
+        self._last_upload_lost = lost
         return ev
 
-    def _flush(self) -> None:
+    def _flush(self, degraded: bool = False) -> None:
         """Cloud aggregation of the buffered updates (staleness-decayed
-        weights); bumps the model version and re-measures accuracy."""
+        weights); bumps the model version and re-measures accuracy.
+
+        ``degraded=True`` is the deadline path: K was not met, so the
+        survivors aggregate with coverage-corrected weights — in real
+        mode the current global vector anchors the missing data mass
+        (``ref.coverage_aggregate_ref``); the analytic model's coverage
+        factor already damps partial flushes."""
         cfg = self.cfg
+        anchor, m_w = None, 0.0
+        if degraded and cfg.mode == "real":
+            missing = max(self.buffer_k - len(self.buffer), 0)
+            anchor = self._global_vec
+            m_w = float(missing * np.mean(self._edge_w))
         glob, info = self.buffer.flush(self.version,
-                                       self.acfg.max_staleness)
+                                       self.acfg.max_staleness,
+                                       anchor=anchor, anchor_weight=m_w)
+        info["degraded"] = degraded
         self._flush_info = info
         applied = False
         if cfg.mode == "real":
@@ -518,6 +664,9 @@ class AsyncHFLEnv(HFLEnv):
             self.n_flushes += 1
             self.k += 1
         self._flushed = applied
+        # reset the deadline clock even for a vacuous flush (every slot
+        # staleness-dropped) — otherwise it would re-trigger every event
+        self._last_flush_time = self.queue.now
 
     def _analytic_flush(self, info) -> float:
         """Analytic-mode accuracy update per flush — the synchronous
@@ -543,6 +692,7 @@ class AsyncHFLEnv(HFLEnv):
         coverage = float(sum(self._edge_sizes[j]
                              for j in set(info["edges"]))
                          / self._edge_sizes.sum())
+        info["coverage"] = coverage
         progress = float(np.sum(q * p)) * coverage ** cfg.cov_pow
         drift = cfg.drift_coef * float(np.std(epochs)) / max(
             float(np.mean(epochs)), 1.0) * cfg.a_rate
@@ -564,8 +714,19 @@ class AsyncHFLEnv(HFLEnv):
         a = np.clip(np.round(np.asarray(action).reshape(-1)[:2]), 1,
                     cfg.gamma_max).astype(np.int64)
         acc_old = self.acc
-        self._launch_round(self._deciding, int(a[0]), int(a[1]))
+        if self._deciding is not None:
+            self._launch_round(self._deciding, int(a[0]), int(a[1]))
         ev = self._process_upload()
+        if ev is None:
+            # the queue drained: every edge departed (mobility churn)
+            # and nothing can ever arrive again — terminal state
+            self._deciding = None
+            info = {"acc": self.acc, "energy": 0.0, "t_use": 0.0,
+                    "t_re": self.t_re, "edge": -1, "g1": 0, "g2": 0,
+                    "flushed": False, "version": self.version,
+                    "staleness": self._staleness.copy(),
+                    "fleet_down": True, "dropped": False}
+            return self._state(), 0.0, True, info
         self._deciding = ev.edge
         cost = ev.payload["cost"]
         r = reward_mod.reward(self.acc, acc_old, cost.energy, cfg.epsilon)
@@ -575,25 +736,39 @@ class AsyncHFLEnv(HFLEnv):
                 "edge": ev.edge, "g1": ev.payload["g1"],
                 "g2": ev.payload["g2"], "flushed": self._flushed,
                 "version": self.version,
-                "staleness": self._staleness.copy()}
+                "staleness": self._staleness.copy(),
+                "dropped": self._last_upload_lost,
+                "retries": int(ev.payload.get("attempt", 0))}
         return self._state(), float(r), bool(done), info
 
     # ------------------------------------------------------------------
     def _state(self) -> np.ndarray:
         base = super()._state()                      # (M+1, n_pca+3)
         m = self.cfg.n_edges
-        extra = np.zeros((m + 1, 3), np.float32)
+        extra = np.zeros((m + 1, 6), np.float32)
         if self.buffer is not None:
             extra[0, 0] = len(self.buffer) / max(self.buffer_k, 1)
         extra[1:, 0] = self._staleness / 10.0
         extra[1:, 1] = self._in_flight.astype(np.float32)
         if self._deciding is not None:
             extra[1 + self._deciding, 2] = 1.0
+        fi = getattr(self, "_injector", None)
+        if fi is not None:
+            # fault columns: cumulative dropped uploads, pending retry
+            # attempt, and outage/departed status (0.5 = outage,
+            # 1 = departed); row 0 carries fleet totals
+            extra[1:, 3] = fi.n_dropped / 10.0
+            extra[1:, 4] = np.minimum(fi.retry_pending, 10) / 10.0
+            extra[1:, 5] = np.where(~fi.alive, 1.0,
+                                    np.where(fi.in_outage, 0.5, 0.0))
+            extra[0, 3] = float(fi.n_dropped.sum()) / 10.0
+            extra[0, 4] = float(fi.n_retries.sum()) / 10.0
+            extra[0, 5] = float((~fi.alive).sum()) / max(m, 1)
         return np.concatenate([base, extra], axis=1)
 
     @property
     def state_shape(self):
-        return (self.cfg.n_edges + 1, self.cfg.n_pca + 6)
+        return (self.cfg.n_edges + 1, self.cfg.n_pca + 9)
 
     @property
     def action_dim(self):

@@ -89,6 +89,16 @@ class CommModel:
                 * rng.lognormal(0, 0.12)
         return out
 
+    def ec_time_edge(self, rng: np.random.Generator, edge: int) -> float:
+        """One fresh edge→cloud sync draw for a single edge — the price
+        of re-uploading after a transient failure (the async runtime's
+        retry path, ``repro.runtime.faults``). Same link model and
+        jitter as :meth:`ec_time`, one draw instead of one per edge."""
+        size = MODEL_MB[self.task]
+        m = REGIONS[self.edge_region[edge]]
+        return float((m["lat"] + 2.0 * size / m["bw"])
+                     * rng.lognormal(0, 0.12))
+
     def de_time(self, rng: np.random.Generator, n_edges: int) -> np.ndarray:
         """Device→edge LAN per edge-sync (milliseconds)."""
         return rng.uniform(0.005, 0.02, n_edges)

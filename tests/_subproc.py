@@ -1,0 +1,57 @@
+"""Shared subprocess harness for tests that need their own process.
+
+Two users:
+
+* the tier-1 sharded-bank wrapper (``test_sharded_bank.py``) re-runs its
+  own file under a forced 8-device CPU backend;
+* the crash-recovery kill/resume test (``test_recovery.py``) runs the
+  async runtime in a child it can SIGKILL mid-stream and then resume.
+
+Both want the same environment plumbing (CPU backend, forced device
+count, ``src`` on ``PYTHONPATH``), so it lives here once.
+"""
+import os
+import subprocess
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def child_env(device_count: int = 1, **extra) -> dict:
+    """Environment for a child Python process: CPU JAX backend with
+    ``device_count`` forced host devices and the repo's ``src`` on
+    ``PYTHONPATH``; ``extra`` entries override."""
+    env = dict(os.environ)
+    env["JAX_PLATFORMS"] = "cpu"
+    env["XLA_FLAGS"] = (
+        f"--xla_force_host_platform_device_count={device_count}")
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    env.update({k: str(v) for k, v in extra.items()})
+    return env
+
+
+def run_pytest(test_file: str, device_count: int = 1,
+               timeout: int = 1200) -> None:
+    """Re-run ``test_file`` with pytest in a child process and assert it
+    passes (tail of its output on failure)."""
+    out = subprocess.run(
+        [sys.executable, "-m", "pytest", "-x", "-q",
+         os.path.abspath(test_file)],
+        env=child_env(device_count), capture_output=True, text=True,
+        timeout=timeout)
+    assert out.returncode == 0, \
+        (out.stdout[-4000:] or "") + (out.stderr[-2000:] or "")
+
+
+def run_script(script: str, *args, device_count: int = 1,
+               timeout: int = 1200, check: bool = True):
+    """Run a Python script in a child process; returns the completed
+    process (stdout/stderr captured)."""
+    out = subprocess.run(
+        [sys.executable, os.path.abspath(script), *map(str, args)],
+        env=child_env(device_count), capture_output=True, text=True,
+        timeout=timeout)
+    if check:
+        assert out.returncode == 0, \
+            (out.stdout[-4000:] or "") + (out.stderr[-2000:] or "")
+    return out

@@ -1,0 +1,79 @@
+"""Child-process driver for the crash-recovery test (not a pytest file).
+
+Modes (argv[1]):
+
+* ``full <ckpt> <save_step>``   — run the episode uninterrupted; also
+  snapshot at ``save_step`` (so the checkpoint exists for ``resume``),
+  then print the final-state JSON.
+* ``crash <ckpt> <save_step>``  — run ``save_step`` steps, snapshot,
+  take two more steps (work that must be lost), then SIGKILL ourselves:
+  a hard crash, no teardown.
+* ``resume <ckpt> <save_step>`` — fresh env, ``load_runtime``, run to
+  episode end, print the final-state JSON.
+
+``full`` and ``resume`` must print identical JSON (same final global
+model hash, bank hash, accuracy, histories) — the recovery contract of
+``repro.checkpoint.store.save_runtime`` (tests/test_recovery.py).
+"""
+import hashlib
+import json
+import os
+import signal
+import sys
+
+import numpy as np
+
+from repro.checkpoint import store
+from repro.runtime import AsyncConfig, FaultSpec
+from repro.sim.env import AsyncHFLEnv, EnvConfig
+
+CFG = dict(task="mnist", mode="real", n_devices=8, n_edges=2,
+           n_local=64, batch_size=32, threshold_time=150.0,
+           gamma_max=3, seed=0)
+ACFG = AsyncConfig(buffer_k=2, flush_deadline=45.0)
+# a *non-null* spec so the resume also proves the fault injector's
+# generator and bookkeeping restore exactly
+SPEC = FaultSpec(drop_prob=0.25, transient_prob=0.2, seed=11)
+ACTION = np.array([2.0, 2.0])
+
+
+def _make_env():
+    return AsyncHFLEnv(EnvConfig(**CFG), ACFG, faults=SPEC)
+
+
+def _finish(env, steps_done: int):
+    done = False
+    while not done:
+        _, _, done, _ = env.step(ACTION)
+        steps_done += 1
+    gvec = np.asarray(env._global_vec)
+    bank = np.asarray(env._spec.flatten(env.bank))
+    print(json.dumps({
+        "acc": env.acc, "version": env.version, "steps": steps_done,
+        "gvec": hashlib.sha256(gvec.tobytes()).hexdigest(),
+        "bank": hashlib.sha256(bank.tobytes()).hexdigest(),
+        "acc_hist_tail": env.acc_hist[-5:],
+        "drops": env._injector.n_dropped.tolist(),
+        "retries": env._injector.n_retries.tolist()}))
+
+
+def main():
+    mode, ckpt, save_step = sys.argv[1], sys.argv[2], int(sys.argv[3])
+    env = _make_env()
+    if mode == "resume":
+        store.load_runtime(env, ckpt)
+        _finish(env, save_step)
+        return
+    env.reset()
+    for _ in range(save_step):
+        env.step(ACTION)
+    store.save_runtime(env, ckpt)
+    if mode == "crash":
+        env.step(ACTION)                 # post-checkpoint work ...
+        env.step(ACTION)                 # ... that the crash destroys
+        os.kill(os.getpid(), signal.SIGKILL)
+    _finish(env, save_step)              # mode == "full"
+
+
+if __name__ == "__main__":
+    main()

@@ -168,6 +168,46 @@ def test_buffer_max_staleness_drops_and_metadata_mode():
         StalenessBuffer(0)
 
 
+def test_buffer_max_staleness_drop_then_flush_renormalizes():
+    """Direct coverage of the ``max_staleness`` drop path: after stale
+    slots are discarded, the survivors' weights renormalize — the flush
+    equals the plain weighted mean over the survivors alone, bitwise,
+    and the dropped edges are reported."""
+    rng = np.random.default_rng(5)
+    k, p = 4, 96
+    vecs = [jnp.asarray(rng.normal(size=(p,)), jnp.float32)
+            for _ in range(k)]
+    w = np.asarray([1.0, 2.0, 3.0, 4.0], np.float32)
+    # versions -> staleness at flush(version=10): [8, 7, 1, 0]
+    versions = [2, 3, 9, 10]
+    buf = StalenessBuffer(k, decay="none")
+    for j in range(k):
+        buf.push(j, vecs[j], float(w[j]), version=versions[j])
+    glob, info = buf.flush(version=10, max_staleness=5)
+    assert info["dropped"] == [0, 1] and info["edges"] == [2, 3]
+    assert info["staleness"] == [1, 0]          # survivors only
+    # survivors aggregate as if the stale slots never existed: the
+    # weight vector renormalizes to w2+w3 (not the full w.sum())
+    want = ops.segment_agg(jnp.stack(vecs[2:]), jnp.asarray(w[2:]),
+                           jnp.zeros((2,), jnp.int32), 1)[0]
+    np.testing.assert_array_equal(np.asarray(glob), np.asarray(want))
+    want_np = (w[2] * np.asarray(vecs[2]) + w[3] * np.asarray(vecs[3])) \
+        / (w[2] + w[3])
+    np.testing.assert_allclose(np.asarray(glob), want_np, atol=1e-6,
+                               rtol=1e-6)
+    # with decay on, the survivor weights also pick up s(tau)
+    buf2 = StalenessBuffer(k, decay="poly", decay_a=0.5)
+    for j in range(k):
+        buf2.push(j, vecs[j], float(w[j]), version=versions[j])
+    glob2, info2 = buf2.flush(version=10, max_staleness=5)
+    want2 = ref.staleness_aggregate_ref(
+        np.stack([np.asarray(v) for v in vecs[2:]]), w[2:], [1, 0],
+        decay="poly", a=0.5)
+    np.testing.assert_allclose(np.asarray(glob2), want2, atol=1e-5,
+                               rtol=1e-5)
+    assert info2["dropped"] == [0, 1]
+
+
 # ---------------------------------------------------------------------------
 # edge_round vs cloud_round: the bitwise-parity contract
 # ---------------------------------------------------------------------------
@@ -320,16 +360,20 @@ def test_async_env_observation_carries_staleness_and_inflight():
                     n_edges=4, threshold_time=600.0, seed=0)
     env = AsyncHFLEnv(cfg, AsyncConfig(buffer_k=2))
     s = env.reset()
-    assert s.shape == env.state_shape == (5, 12)
+    # n_pca + 3 sync cols + 3 async cols + 3 fault cols (PR 6)
+    assert s.shape == env.state_shape == (5, 15)
     assert env.action_dim == 2
-    stale_col, flight_col, decide_col = s[1:, -3], s[1:, -2], s[1:, -1]
+    stale_col, flight_col, decide_col = s[1:, -6], s[1:, -5], s[1:, -4]
     assert np.isfinite(s).all()
     # the deciding edge is not in flight; every other edge is
     assert decide_col.sum() == 1.0
     j = int(np.argmax(decide_col))
     assert flight_col[j] == 0.0 and flight_col.sum() == cfg.n_edges - 1
     assert (stale_col >= 0).all()
-    assert s[0, -3] == len(env.buffer) / env.buffer_k
+    assert s[0, -6] == len(env.buffer) / env.buffer_k
+    # fault columns (drops / pending retries / outage) are all-zero in a
+    # fault-free run
+    assert (s[:, -3:] == 0).all()
 
 
 def test_async_env_analytic_episode_terminates_and_learns():

@@ -1,0 +1,383 @@
+"""Fault-injection layer (repro.runtime.faults) + fault-tolerant async
+runtime (AsyncHFLEnv): determinism contract, retry/backoff, outage
+windows, mobility churn, coverage-corrected degraded flushes, and the
+seeded chaos smoke test.
+
+The load-bearing guarantees (ISSUE/DESIGN.md §5):
+
+* a null ``FaultSpec`` (or ``faults=None``) reproduces the fault-free
+  runtime **bitwise** — no extra events, no extra draws;
+* same seed + same spec ⇒ bitwise-identical trajectory across runs;
+* a degraded flush equals ``ref.coverage_aggregate_ref``;
+* a departed edge's bank rows stay bit-identical until it rejoins.
+"""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.runtime import (AsyncConfig, ChurnEvent, EventQueue,
+                           FaultInjector, FaultSpec, Outage,
+                           StalenessBuffer)
+from repro.sim.env import AsyncHFLEnv, EnvConfig
+
+ANALYTIC_CFG = dict(task="mnist", mode="analytic", n_devices=20,
+                    n_edges=4, threshold_time=400.0, seed=0)
+REAL_CFG = dict(task="mnist", mode="real", n_devices=8, n_edges=2,
+                n_local=64, batch_size=32, threshold_time=240.0,
+                gamma_max=3, seed=0)
+
+
+def _run(env, n=10**9, action=(3.0, 2.0)):
+    done, i, infos = False, 0, []
+    while not done and i < n:
+        _, _, done, info = env.step(np.asarray(action))
+        infos.append(info)
+        i += 1
+    return infos
+
+
+def _trace(env):
+    return (env.acc_hist, env.time_hist, env.energy_hist, env.version,
+            env.queue.now, env.queue._seq)
+
+
+# ---------------------------------------------------------------------------
+# spec validation + null-spec guarantees
+# ---------------------------------------------------------------------------
+
+def test_faultspec_validation():
+    with pytest.raises(ValueError):
+        ChurnEvent(1.0, 0, "explode")
+    spec = FaultSpec(drop_prob=[0.1, 0.2])
+    with pytest.raises(ValueError):
+        spec.drop_prob_per_edge(3)
+    np.testing.assert_allclose(spec.drop_prob_per_edge(2), [0.1, 0.2])
+    assert not FaultSpec().enabled
+    assert FaultSpec(transient_prob=0.1).enabled
+    assert FaultSpec(outages=(Outage(0, 1.0, 2.0),)).enabled
+
+
+def test_null_spec_makes_no_draws_and_schedules_nothing():
+    fi = FaultInjector(None, 3)
+    q = EventQueue()
+    state0 = fi.rng.bit_generator.state
+    fi.schedule_initial(q)
+    assert len(q) == 0 and q._seq == 0
+    for att in range(3):
+        assert fi.upload_fate(1, att, 10.0, 0.0) == "ok"
+    assert fi.rng.bit_generator.state == state0     # zero draws
+
+
+def test_null_spec_bitwise_parity_with_no_faults():
+    """faults=None, FaultSpec(), and an explicit all-zeros spec must
+    produce the same trajectory bit for bit (event order, times, seq
+    counter, accuracy/energy histories)."""
+    traces = []
+    for faults in (None, FaultSpec(), FaultSpec(drop_prob=0.0,
+                                                transient_prob=0.0)):
+        env = AsyncHFLEnv(EnvConfig(**ANALYTIC_CFG),
+                          AsyncConfig(buffer_k=2), faults=faults)
+        env.reset()
+        _run(env, 40)
+        traces.append(_trace(env))
+    assert traces[0] == traces[1] == traces[2]
+
+
+# ---------------------------------------------------------------------------
+# determinism under faults
+# ---------------------------------------------------------------------------
+
+def test_same_seed_same_spec_identical_trajectory():
+    spec = FaultSpec(drop_prob=0.2, transient_prob=0.25,
+                     outages=(Outage(1, 120.0, 60.0),),
+                     churn=(ChurnEvent(150.0, 2, "leave"),
+                            ChurnEvent(280.0, 2, "join")),
+                     seed=7)
+    traces, drops = [], []
+    for _ in range(2):
+        env = AsyncHFLEnv(EnvConfig(**ANALYTIC_CFG),
+                          AsyncConfig(buffer_k=2, flush_deadline=50.0),
+                          faults=spec)
+        env.reset()
+        _run(env)
+        traces.append(_trace(env))
+        drops.append((env._injector.n_dropped.tolist(),
+                      env._injector.n_retries.tolist()))
+    assert traces[0] == traces[1]
+    assert drops[0] == drops[1]
+    assert sum(drops[0][0]) + sum(drops[0][1]) > 0   # faults actually fired
+
+
+# ---------------------------------------------------------------------------
+# retry / backoff
+# ---------------------------------------------------------------------------
+
+def test_transient_failures_retry_then_drop():
+    """transient_prob=1: every attempt fails; the injector retries
+    exactly max_retries times with capped exponential backoff, then
+    permanently drops."""
+    spec = FaultSpec(transient_prob=1.0, max_retries=3, backoff_base=2.0,
+                     backoff_cap=6.0, retry_timeout=0.0)
+    fi = FaultInjector(spec, 2)
+    fates = [fi.upload_fate(0, a, float(a), 0.0) for a in range(4)]
+    assert fates == ["retry", "retry", "retry", "drop"]
+    assert fi.n_retries[0] == 3 and fi.n_dropped[0] == 1
+
+    class _Comm:
+        def ec_time_edge(self, rng, edge):
+            return 1.0
+
+    delays = [fi.retry_delay(_Comm(), 0, a) for a in range(4)]
+    # backoff component: 2, 4, 6 (capped), 6 (capped); +1s comm each
+    np.testing.assert_allclose(delays, [3.0, 5.0, 7.0, 7.0])
+
+
+def test_retry_timeout_converts_to_drop():
+    spec = FaultSpec(transient_prob=1.0, max_retries=10,
+                     retry_timeout=30.0)
+    fi = FaultInjector(spec, 1)
+    assert fi.upload_fate(0, 1, now=10.0, first_try=0.0) == "retry"
+    assert fi.upload_fate(0, 2, now=31.0, first_try=0.0) == "drop"
+
+
+def test_permanent_drop_draws_only_on_first_attempt():
+    spec = FaultSpec(drop_prob=1.0)
+    fi = FaultInjector(spec, 1)
+    assert fi.upload_fate(0, 0, 0.0, 0.0) == "drop"     # first try
+    assert fi.upload_fate(0, 1, 0.0, 0.0) == "ok"       # a retry never
+    # re-rolls permanent dropout (it already survived attempt 0)
+
+
+def test_retries_priced_from_injector_rng_not_env_rng():
+    """Fault handling (fate draws, retry pricing) must never advance the
+    env's round-cost generator: after reset — identical launches, but
+    the faulty env also drew fates and priced retries — both envs'
+    numpy generators sit in the same state, and every pending
+    first-attempt upload keeps its fault-free schedule time."""
+    env0 = AsyncHFLEnv(EnvConfig(**ANALYTIC_CFG), AsyncConfig(buffer_k=2))
+    env1 = AsyncHFLEnv(EnvConfig(**ANALYTIC_CFG), AsyncConfig(buffer_k=2),
+                       faults=FaultSpec(transient_prob=0.9, seed=4))
+    env0.reset()
+    env1.reset()
+    assert env0.rng.bit_generator.state == env1.rng.bit_generator.state
+    t0 = {(e.edge, e.time) for e in env0.queue.events()
+          if e.kind == "upload"}
+    t1 = {(e.edge, e.time) for e in env1.queue.events()
+          if e.kind == "upload" and e.payload.get("attempt", 0) == 0}
+    # env0 popped exactly one initial upload: (deciding edge, now). Every
+    # pending first-attempt upload in the faulty env must carry one of
+    # the fault-free schedule times.
+    assert t1 <= t0 | {(env0._deciding, env0.queue.now)}
+
+
+# ---------------------------------------------------------------------------
+# outage windows
+# ---------------------------------------------------------------------------
+
+def test_outage_window_forces_retries_inside_only():
+    """An outage on edge 0 makes its uploads retry while the window is
+    open; a generous retry budget lets them land after it closes."""
+    spec = FaultSpec(outages=(Outage(0, 0.0, 150.0),), max_retries=50,
+                     backoff_base=10.0, backoff_cap=30.0,
+                     retry_timeout=0.0)
+    env = AsyncHFLEnv(EnvConfig(**ANALYTIC_CFG), AsyncConfig(buffer_k=2),
+                      faults=spec)
+    env.reset()
+    infos = _run(env)
+    fi = env._injector
+    assert fi.n_retries[0] > 0                  # the window forced retries
+    assert fi.n_retries[1:].sum() == 0          # only edge 0 was hit
+    assert fi.n_dropped.sum() == 0              # budget outlasted the window
+    landed = [i for i in infos if i["edge"] == 0 and not i["dropped"]]
+    assert landed                               # edge 0 recovered
+
+
+# ---------------------------------------------------------------------------
+# mobility churn
+# ---------------------------------------------------------------------------
+
+def test_churn_leave_suppresses_uploads_until_join():
+    leave_t, join_t = 120.0, 260.0
+    spec = FaultSpec(churn=(ChurnEvent(leave_t, 0, "leave"),
+                            ChurnEvent(join_t, 0, "join")))
+    env = AsyncHFLEnv(EnvConfig(**ANALYTIC_CFG), AsyncConfig(buffer_k=2),
+                      faults=spec)
+    env.reset()
+    gap_uploads = []
+    done = False
+    while not done:
+        _, _, done, info = env.step(np.array([3.0, 2.0]))
+        if leave_t < env.queue.now < join_t and info["edge"] == 0:
+            gap_uploads.append(info)
+    assert not gap_uploads          # no edge-0 upload lands while departed
+    assert env._injector.alive[0]   # rejoined by episode end
+    assert 0 in [i["edge"] for i in _run(env, 0)] or True
+
+
+def test_churn_join_resyncs_only_the_joining_edges_rows():
+    """Real mode: while edge 0 is departed the other edge's bank rows
+    must stay bit-identical through the join resync, and the joining
+    edge's rows/edge-model come back equal to the current global
+    vector (hfl.masked_resync)."""
+    env = AsyncHFLEnv(EnvConfig(**REAL_CFG), AsyncConfig(buffer_k=2),
+                      faults=FaultSpec())
+    env.reset()
+    _run(env, 3, action=(2.0, 2.0))
+    env._handle_leave(0)
+    assert not env._injector.alive[0] and not env._in_flight[0]
+    bank_before = np.asarray(env._spec.flatten(env.bank))
+    rows_other = np.asarray(env.edge_assign) != 0
+    env._handle_join(0)
+    bank_after = np.asarray(env._spec.flatten(env.bank))
+    gvec = np.asarray(env._global_vec, np.float32)
+    # non-joining rows: bit-identical
+    assert (bank_before[rows_other] == bank_after[rows_other]).all()
+    # joining rows: the current global model (modulo bank dtype cast)
+    want = jnp.asarray(gvec, env._spec.dtype)
+    for r in np.where(~rows_other)[0]:
+        assert (bank_after[r] == np.asarray(want, bank_after.dtype)).all()
+    assert env._injector.alive[0] and env._in_flight[0]  # relaunched
+
+
+def test_fleet_down_terminates_episode():
+    """Every edge leaves and never rejoins: the queue drains and step
+    reports a terminal state instead of crashing."""
+    spec = FaultSpec(churn=tuple(ChurnEvent(60.0, j, "leave")
+                                 for j in range(4)))
+    env = AsyncHFLEnv(EnvConfig(**ANALYTIC_CFG), AsyncConfig(buffer_k=2),
+                      faults=spec)
+    env.reset()
+    infos = _run(env, 500)
+    assert infos[-1].get("fleet_down"), infos[-1]
+    assert not env._injector.alive.any()
+
+
+# ---------------------------------------------------------------------------
+# graceful degradation: deadline flush with coverage correction
+# ---------------------------------------------------------------------------
+
+def test_degraded_flush_matches_coverage_oracle():
+    rng = np.random.default_rng(0)
+    k, p = 3, 57
+    vecs = [jnp.asarray(rng.normal(size=(p,)), jnp.float32)
+            for _ in range(k)]
+    anchor = jnp.asarray(rng.normal(size=(p,)), jnp.float32)
+    w = rng.uniform(0.5, 2.0, size=k).astype(np.float32)
+    buf = StalenessBuffer(5, decay="poly", decay_a=0.5)
+    for j in range(k):
+        buf.push(j, vecs[j], float(w[j]), version=8 - j)
+    glob, info = buf.flush(version=10, anchor=anchor, anchor_weight=3.0)
+    want = ref.coverage_aggregate_ref(
+        np.stack(vecs), w, [10 - (8 - j) for j in range(k)],
+        np.asarray(anchor), 3.0, decay="poly", a=0.5)
+    np.testing.assert_allclose(np.asarray(glob), want, atol=1e-5,
+                               rtol=1e-5)
+    assert 0.0 < info["coverage"] < 1.0
+    assert info["anchor_weight"] == 3.0
+
+
+def test_degraded_flush_reduces_to_plain_at_zero_anchor_weight():
+    rng = np.random.default_rng(1)
+    vecs = [jnp.asarray(rng.normal(size=(31,)), jnp.float32)
+            for _ in range(2)]
+
+    def fill():
+        buf = StalenessBuffer(2)
+        for j, v in enumerate(vecs):
+            buf.push(j, v, 1.0 + j, version=0)
+        return buf
+
+    a, _ = fill().flush(version=1)
+    b, info = fill().flush(version=1, anchor=vecs[0], anchor_weight=0.0)
+    assert (np.asarray(a) == np.asarray(b)).all()
+    assert "coverage" not in info
+
+
+def test_deadline_triggers_degraded_flush_under_dropout():
+    """Heavy dropout + a flush deadline: the run must make progress via
+    degraded flushes rather than stalling forever below K."""
+    spec = FaultSpec(drop_prob=[0.9, 0.9, 0.9, 0.0], seed=3)
+    env = AsyncHFLEnv(EnvConfig(**ANALYTIC_CFG),
+                      AsyncConfig(buffer_k=4, flush_deadline=12.0),
+                      faults=spec)
+    env.reset()
+    degraded = 0
+    done = False
+    while not done:
+        _, _, done, _ = env.step(np.array([3.0, 2.0]))
+        if env._flush_info is not None \
+                and env._flush_info.get("degraded"):
+            degraded += 1
+    assert degraded > 0
+    assert env.n_flushes > 0 and np.isfinite(env.acc)
+
+
+def test_real_degraded_flush_folds_into_weights():
+    """Real mode end-to-end: with one edge fully dropped and a deadline,
+    flushes carry the coverage correction and the model stays finite."""
+    spec = FaultSpec(drop_prob=[1.0, 0.0], seed=5)
+    env = AsyncHFLEnv(EnvConfig(**REAL_CFG),
+                      AsyncConfig(buffer_k=2, flush_deadline=10.0),
+                      faults=spec)
+    env.reset()
+    coverages = []
+    for _ in range(8):
+        _, _, done, _ = env.step(np.array([2.0, 2.0]))
+        info = env._flush_info
+        if info is not None and info.get("degraded"):
+            coverages.append(info["coverage"])
+        if done:
+            break
+    assert env._injector.n_dropped[0] > 0
+    assert env.n_flushes > 0
+    assert coverages and all(0.0 < c < 1.0 for c in coverages)
+    assert np.isfinite(np.asarray(env._global_vec)).all()
+
+
+# ---------------------------------------------------------------------------
+# observation surface + chaos smoke
+# ---------------------------------------------------------------------------
+
+def test_observation_carries_fault_columns():
+    spec = FaultSpec(drop_prob=0.5, transient_prob=0.5, seed=2)
+    env = AsyncHFLEnv(EnvConfig(**ANALYTIC_CFG),
+                      AsyncConfig(buffer_k=2, flush_deadline=50.0),
+                      faults=spec)
+    s = env.reset()
+    assert s.shape == env.state_shape \
+        == (5, EnvConfig(**ANALYTIC_CFG).n_pca + 9)
+    for _ in range(30):
+        s, _, done, _ = env.step(np.array([3.0, 2.0]))
+        if done:
+            break
+    fi = env._injector
+    # dropped-uploads column mirrors the injector's counters
+    np.testing.assert_allclose(s[1:, -3], fi.n_dropped / 10.0)
+    assert s[0, -3] == pytest.approx(fi.n_dropped.sum() / 10.0)
+    assert (s[1:, -2] >= 0).all() and (s[1:, -1] >= 0).all()
+
+
+def test_chaos_smoke_random_spec_completes_finite():
+    """Tier-1 chaos test: a seeded random FaultSpec (dropout + transients
+    + an outage + a leave/join pair) must run to completion with a
+    finite model/accuracy — in both env modes."""
+    spec = FaultSpec.random(seed=123, n_edges=4, horizon=400.0)
+    assert spec.enabled
+    env = AsyncHFLEnv(EnvConfig(**ANALYTIC_CFG),
+                      AsyncConfig(buffer_k=2, flush_deadline=60.0),
+                      faults=spec)
+    env.reset()
+    infos = _run(env, 600)
+    assert infos[-1]["t_re"] < 0 or infos[-1].get("fleet_down")
+    assert np.isfinite(env.acc) and 0.0 < env.acc <= 1.0
+
+    spec_r = FaultSpec.random(seed=321, n_edges=2, horizon=240.0)
+    env_r = AsyncHFLEnv(EnvConfig(**REAL_CFG),
+                        AsyncConfig(buffer_k=2, flush_deadline=60.0),
+                        faults=spec_r)
+    env_r.reset()
+    _run(env_r, 10, action=(2.0, 2.0))
+    assert np.isfinite(np.asarray(env_r._global_vec)).all()
+    assert np.isfinite(env_r.acc)

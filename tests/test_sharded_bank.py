@@ -13,8 +13,6 @@ test re-runs this file in a subprocess with the forced device count, so
 tier-1 still covers the sharded engine end to end.
 """
 import os
-import subprocess
-import sys
 
 import numpy as np
 import pytest
@@ -26,7 +24,8 @@ from repro.core import flatbank, hfl
 from repro.kernels import ops, ref
 from repro.launch import mesh as mesh_lib
 
-REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+import _subproc
+
 NDEV = jax.device_count()
 needs_mesh = pytest.mark.skipif(
     NDEV < 8,
@@ -241,6 +240,45 @@ def test_staleness_flush_sharded_matches_oracle(shape):
 
 
 @needs_mesh
+@pytest.mark.parametrize("shape", MESH_SHAPES)
+def test_degraded_flush_sharded_matches_oracle(shape):
+    """The coverage-corrected (degraded) flush appends the anchor row to
+    the stack, so 7 survivors + 1 anchor = 8 rows still divide the
+    1/2/4-shard meshes — the unchanged shard_map + psum path must match
+    ``ref.coverage_aggregate_ref`` and the single-chip degraded flush."""
+    from repro.kernels import ref as ref_mod
+    from repro.runtime import StalenessBuffer
+    rng = np.random.default_rng(13)
+    k, p = 7, 130                       # +1 anchor row -> 8 total
+    vecs = [jnp.asarray(rng.normal(size=(p,)), jnp.float32)
+            for _ in range(k)]
+    anchor = jnp.asarray(rng.normal(size=(p,)), jnp.float32)
+    w = np.asarray(rng.uniform(0.5, 2.0, size=k), np.float32)
+    tau = rng.integers(0, 4, size=k)
+    m_w = 2.5                           # missing data mass
+
+    def fill(buf):
+        for j in range(k):
+            buf.push(j, vecs[j], float(w[j]), version=10 - int(tau[j]))
+        return buf
+
+    single, _ = fill(StalenessBuffer(k + 1, decay="poly")).flush(
+        version=10, anchor=anchor, anchor_weight=m_w)
+    mesh = mesh_lib.make_bank_mesh(*shape)
+    sharded, info = fill(StalenessBuffer(k + 1, decay="poly",
+                                         mesh=mesh)).flush(
+        version=10, anchor=anchor, anchor_weight=m_w)
+    assert 0.0 < info["coverage"] < 1.0
+    want = ref_mod.coverage_aggregate_ref(np.stack(vecs), w, tau,
+                                          np.asarray(anchor), m_w,
+                                          decay="poly", a=0.5)
+    np.testing.assert_allclose(np.asarray(sharded), want, atol=1e-5,
+                               rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(sharded), np.asarray(single),
+                               atol=1e-5, rtol=1e-5)
+
+
+@needs_mesh
 def test_staleness_flush_indivisible_k_falls_back():
     """K not divisible by the mesh -> the flush silently uses the
     single-chip launch (the buffer is small; correctness first)."""
@@ -374,13 +412,4 @@ def test_sharded_suite_in_subprocess():
         pytest.skip("CI runs the dedicated sharded-parity job "
                     "(scripts/ci.sh test-sharded); no need to pay the "
                     "suite twice per workflow run")
-    env = dict(os.environ)
-    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
-    env["JAX_PLATFORMS"] = "cpu"
-    env["PYTHONPATH"] = os.path.join(REPO, "src")
-    out = subprocess.run(
-        [sys.executable, "-m", "pytest", "-x", "-q",
-         os.path.abspath(__file__)],
-        env=env, capture_output=True, text=True, timeout=1200)
-    assert out.returncode == 0, \
-        (out.stdout[-4000:] or "") + (out.stderr[-2000:] or "")
+    _subproc.run_pytest(__file__, device_count=8)
