@@ -25,7 +25,7 @@ def run(quick: bool = True):
     g1, g2, target = 4, 2, 0.6
     cfg = analytic_cfg(n_devices=20, n_edges=4, threshold_time=2000.0,
                        edge_regions=("cn", "cn", "us", "us"))
-    h = sync.run_vanilla_hfl(HFLEnv(cfg), g1=g1, g2=g2)
+    h = sync.run_scheme("vanilla-hfl", HFLEnv(cfg), g1=g1, g2=g2)
     t_sync = _time_to(h, target)
     rows.append({"scheme": "sync-barrier", "t_to_0.6_s": round(t_sync, 1),
                  "final_acc": round(h["final_acc"], 4),
@@ -38,7 +38,7 @@ def run(quick: bool = True):
     for name, k, decay, a in settings:
         env = AsyncHFLEnv(cfg, AsyncConfig(buffer_k=k, decay=decay,
                                            decay_a=a))
-        h = sync.run_async_fedavg(env, g1=g1, g2=g2)
+        h = sync.run_scheme("async-fedavg", env, g1=g1, g2=g2)
         t = _time_to(h, target)
         rows.append({"scheme": name, "t_to_0.6_s": round(t, 1),
                      "final_acc": round(h["final_acc"], 4),

@@ -15,14 +15,14 @@ def run(quick: bool = True):
         (lambda: HFLEnv(small_real_cfg(n_devices=20, n_local=256,
                                        threshold_time=600.0)))
     runs = [
-        ("vanilla-fl", lambda e: sync.run_vanilla_fl(e, g1=3, frac=0.8)),
-        ("vanilla-hfl", lambda e: sync.run_vanilla_hfl(e, g1=2, g2=2)),
-        ("var-freq-a", sync.run_var_freq_a),
-        ("var-freq-b", sync.run_var_freq_b),
+        ("vanilla-fl", {"g1": 3, "frac": 0.8}),
+        ("vanilla-hfl", {"g1": 2, "g2": 2}),
+        ("var-freq-a", {}),
+        ("var-freq-b", {}),
     ]
-    for name, fn in runs:
+    for name, overrides in runs:
         env = mk()
-        h = fn(env)
+        h = sync.run_scheme(name, env, **overrides)
         rows.append({"scheme": name, "final_acc": round(h["final_acc"], 4),
                      "total_energy_mAh": round(h["total_energy"], 1),
                      "rounds": h["rounds"]})

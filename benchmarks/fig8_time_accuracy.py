@@ -31,15 +31,16 @@ def run(quick: bool = True):
     hwamei, _ = sync.train_agent(HFLEnv(analytic_cfg(seed=1)),
                                  episodes=episodes, enhancements=False)
     runs = [
-        ("vanilla-fl", lambda e: sync.run_vanilla_fl(e, g1=5, frac=0.8)),
-        ("vanilla-hfl", lambda e: sync.run_vanilla_hfl(e, g1=5, g2=4)),
-        ("favor", lambda e: sync.run_favor(e, g1=5)),
-        ("var-freq-b", sync.run_var_freq_b),
-        ("hwamei", lambda e: sync.run_learned(e, hwamei)),
-        ("arena", lambda e: sync.run_learned(e, arena)),
+        ("vanilla-fl", {"g1": 5, "frac": 0.8}, None),
+        ("vanilla-hfl", {"g1": 5, "g2": 4}, None),
+        ("favor", {"g1": 5}, None),
+        ("var-freq-b", {}, None),
+        ("hwamei", {}, hwamei),
+        ("arena", {}, arena),
     ]
-    for name, fn in runs:
-        h = fn(HFLEnv(analytic_cfg(seed=7)))
+    for name, overrides, agent in runs:
+        h = sync.run_scheme(name, HFLEnv(analytic_cfg(seed=7)),
+                            agent=agent, **overrides)
         rows.append({"scheme": name,
                      "final_acc": round(h["final_acc"], 4),
                      "t_to_target_s": _time_to(h, target),

@@ -15,14 +15,14 @@ def run(quick: bool = True):
     agent, _ = sync.train_agent(HFLEnv(analytic_cfg()),
                                 episodes=episodes)
     for t in ((2100, 2400, 2700, 3000) if not quick else (2100, 3000)):
-        for name, fn in (
-                ("arena", lambda e: sync.run_learned(e, agent)),
-                ("vanilla-hfl",
-                 lambda e: sync.run_vanilla_hfl(e, g1=5, g2=4)),
-                ("vanilla-fl",
-                 lambda e: sync.run_vanilla_fl(e, g1=5, frac=0.8))):
+        for name, overrides in (
+                ("arena", {}),
+                ("vanilla-hfl", {"g1": 5, "g2": 4}),
+                ("vanilla-fl", {"g1": 5, "frac": 0.8})):
             env = HFLEnv(analytic_cfg(threshold_time=float(t), seed=5))
-            h = fn(env)
+            h = sync.run_scheme(name, env,
+                                agent=agent if name == "arena" else None,
+                                **overrides)
             rows.append({"setting": f"T{t}/{name}",
                          "final_acc": round(h["final_acc"], 4),
                          "avg_energy_mAh": round(h["avg_energy"], 2)})

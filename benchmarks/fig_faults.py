@@ -34,7 +34,7 @@ def run(quick: bool = True):
 
     # fault-free synchronous barrier reference (the barrier has no
     # fault model: its row is the zero-fault baseline both grids share)
-    h = sync.run_vanilla_hfl(HFLEnv(cfg), g1=g1, g2=g2)
+    h = sync.run_scheme("vanilla-hfl", HFLEnv(cfg), g1=g1, g2=g2)
     t_sync = _time_to(h, target)
     rows.append({"scheme": "sync-barrier-nofault",
                  "t_to_target_s": round(t_sync, 1),
@@ -49,7 +49,7 @@ def run(quick: bool = True):
                 cfg, AsyncConfig(buffer_k=2, decay="poly", decay_a=0.5,
                                  flush_deadline=120.0),
                 faults=spec if spec.enabled else None)
-            h = sync.run_async_fedavg(env, g1=g1, g2=g2)
+            h = sync.run_scheme("async-fedavg", env, g1=g1, g2=g2)
             t = _time_to(h, target)
             fi = env._injector
             rows.append({

@@ -113,9 +113,9 @@ def run(quick: bool = True):
     # sharded launch (overhead_vs_plain) staying near 1.
     from repro.core import hfl
     from repro.launch import mesh as mesh_lib
-    mesh1 = mesh_lib.make_bank_mesh(1)
+    ctx1 = hfl.AggContext.for_mesh(mesh_lib.make_bank_mesh(1))
     us_s = _time(lambda b_, w_, s_: hfl.weighted_aggregate(
-        {"w": b_}, w_, s_, n_edge, mesh=mesh1)["w"], mat, wd, seg)
+        {"w": b_}, w_, s_, n_edge, ctx=ctx1)["w"], mat, wd, seg)
     # per-shard HBM totals are unchanged (each shard reads its N/K rows
     # once, writes E*P once); both comparators are recorded — the gated
     # oracle ratio and the shard_map overhead vs the plain kernel
@@ -124,6 +124,25 @@ def run(quick: bool = True):
                  "kernel_us_per_call": round(us_s, 1),
                  "plain_kernel_us_per_call": round(us_k, 1),
                  "overhead_vs_plain": round(us_s / max(us_k, 1e-9), 2),
+                 "hbm_bytes_naive": naive_hbm,
+                 "hbm_bytes_kernel": kern_hbm,
+                 "traffic_ratio": round(naive_hbm / kern_hbm, 2)})
+    # ------------------------------------------------------------------
+    # sharded async edge round's masked aggregation: edge-style weights
+    # (one active edge, the rest masked to zero) through the AggContext
+    # sharded launch (shard_map + psum on the 1-shard mesh) vs the jnp
+    # oracle. This is the per-upload hot launch of the mesh-aware
+    # AsyncHFLEnv (hfl.make_edge_round under a sharded AggContext); the
+    # masking folds into the weight vector so the HBM totals match the
+    # unmasked row above.
+    w_mask = jnp.asarray(np.asarray(wd) * (np.asarray(seg) == 0), jnp.float32)
+    us = _time(jax.jit(lambda *a: ref.segment_agg_ref(*a, n_edge)),
+               mat, w_mask, seg)
+    us_e = _time(lambda b_, w_, s_: hfl.weighted_aggregate(
+        {"w": b_}, w_, s_, n_edge, ctx=ctx1)["w"], mat, w_mask, seg)
+    rows.append({"setting": "segment_agg_edge_sharded_64x8x500k",
+                 "oracle_us_per_call": round(us, 1),
+                 "kernel_us_per_call": round(us_e, 1),
                  "hbm_bytes_naive": naive_hbm,
                  "hbm_bytes_kernel": kern_hbm,
                  "traffic_ratio": round(naive_hbm / kern_hbm, 2)})

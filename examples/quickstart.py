@@ -6,9 +6,14 @@ synthetic federated MNIST (the paper's pipeline end-to-end, small).
 Walks through: profiling/clustering -> HFL env -> PPO agent episodes ->
 evaluation vs a Vanilla-HFL baseline -> the event-driven async runtime
 (``--async-k`` sets the cloud buffer size; 0 skips the async run).
-``--faults`` re-runs the async demo under a seeded chaos FaultSpec
-(dropout + transient failures + an outage + leave/join churn) and prints
-the survivor-coverage statistics of the degraded flushes.
+``--faults`` *replaces* the plain async demo with one under a seeded
+chaos FaultSpec (dropout + transient failures + an outage + leave/join
+churn) and prints the survivor-coverage statistics of the degraded
+flushes — it owns the buffer size (K=2), so combining it with an
+explicit ``--async-k`` is an error.
+
+Every scheme run dispatches through ``sync.run_scheme`` (the
+``SchemeSpec`` registry) — the same entry point ``benchmarks/`` uses.
 """
 import argparse
 
@@ -23,12 +28,20 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--episodes", type=int, default=3)
     ap.add_argument("--mode", default="real", choices=["real", "analytic"])
-    ap.add_argument("--async-k", type=int, default=1,
-                    help="async buffer size K (0 skips the async demo)")
+    ap.add_argument("--async-k", type=int, default=None,
+                    help="async buffer size K (0 skips the async demo; "
+                         "default 1; incompatible with --faults)")
     ap.add_argument("--faults", action="store_true",
                     help="run the async demo under a seeded chaos "
-                         "FaultSpec and print survivor-coverage stats")
+                         "FaultSpec and print survivor-coverage stats "
+                         "(owns the buffer size — mutually exclusive "
+                         "with --async-k)")
     args = ap.parse_args()
+    if args.faults and args.async_k is not None:
+        ap.error("--faults and --async-k are mutually exclusive: the "
+                 "faults demo owns its buffer size (K=2 so degraded "
+                 "flushes can bite); drop one of the two flags")
+    async_k = 1 if args.async_k is None else args.async_k
 
     cfg = EnvConfig(task="mnist", mode=args.mode, n_devices=10, n_edges=2,
                     n_local=96, threshold_time=240.0, gamma_max=3, seed=0)
@@ -41,20 +54,20 @@ def main():
     agent, log = sync.train_agent(env, episodes=args.episodes, log_every=1)
 
     print("\n== evaluation episode (deterministic policy) ==")
-    h = sync.run_learned(env, agent)
+    h = sync.run_scheme("arena", env, agent=agent)
     print(f"arena: acc={h['final_acc']:.3f} "
           f"energy={h['total_energy']:.1f} mAh rounds={h['rounds']}")
 
-    h2 = sync.run_vanilla_hfl(HFLEnv(cfg), g1=2, g2=2)
+    h2 = sync.run_scheme("vanilla-hfl", HFLEnv(cfg), g1=2, g2=2)
     print(f"vanilla-hfl: acc={h2['final_acc']:.3f} "
           f"energy={h2['total_energy']:.1f} mAh rounds={h2['rounds']}")
 
-    if args.async_k:
+    if async_k and not args.faults:
         print(f"\n== async runtime (event-driven, buffer K="
-              f"{args.async_k}, poly staleness decay) ==")
-        aenv = AsyncHFLEnv(cfg, AsyncConfig(buffer_k=args.async_k,
+              f"{async_k}, poly staleness decay) ==")
+        aenv = AsyncHFLEnv(cfg, AsyncConfig(buffer_k=async_k,
                                             decay="poly", decay_a=0.5))
-        h3 = sync.run_async_fedavg(aenv, g1=2, g2=2)
+        h3 = sync.run_scheme("async-fedavg", aenv, g1=2, g2=2)
         print(f"async-fedavg: acc={h3['final_acc']:.3f} "
               f"energy={h3['total_energy']:.1f} mAh "
               f"uploads={h3['rounds']} flushes={aenv.n_flushes}")
@@ -62,7 +75,7 @@ def main():
     if args.faults:
         spec = FaultSpec.random(seed=42, n_edges=cfg.n_edges,
                                 horizon=cfg.threshold_time)
-        k = max(args.async_k, 2)     # K >= 2 so degradation can bite
+        k = 2                        # K >= 2 so degradation can bite
         print(f"\n== fault-tolerant async runtime (chaos spec: "
               f"drop={np.round(spec.drop_prob, 2).tolist()} "
               f"transient={spec.transient_prob:.2f} "

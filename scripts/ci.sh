@@ -7,7 +7,10 @@
 #                                (pallas interpret mode; the ROADMAP
 #                                verify command)
 #   scripts/ci.sh test-sharded   sharded-parity tier: the mesh tests
-#                                under 8 forced host devices
+#                                under 8 forced host devices — incl.
+#                                the AggContext sharded async edge
+#                                round + trajectory bitwise-parity
+#                                suite (tests/test_sharded_bank.py)
 #   scripts/ci.sh test-runtime   the async-runtime slice of tier-1
 #                                (event queue, staleness buffer,
 #                                edge-round parity, hardware models) —

@@ -9,7 +9,12 @@ Python sources:
   test tier spends minutes importing jax);
 * no tab indentation, no trailing whitespace, no CRLF line endings;
 * lines at most 99 characters (the repo style is ~79; 99 is the hard
-  ceiling so URLs and test fixtures fit).
+  ceiling so URLs and test fixtures fit);
+* no in-repo caller uses the deprecated ``mesh=`` kwarg on the
+  ``repro.core.hfl`` aggregation surface — new code passes
+  ``ctx=AggContext.for_mesh(...)``. A call site that *intends* to
+  exercise the deprecation shim (its test) opts out with a
+  ``# allow-mesh-kwarg`` comment on the call line.
 """
 from __future__ import annotations
 
@@ -20,6 +25,48 @@ import sys
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 MAX_LINE = 99
+
+# the AggContext-bearing surface: calls to these names (bare or as an
+# attribute, e.g. ``hfl.make_edge_round``) must not pass ``mesh=``
+_CTX_FUNCS = frozenset({
+    "weighted_aggregate", "edge_aggregate", "cloud_aggregate",
+    "masked_resync", "make_cloud_round", "make_edge_round",
+    "make_fedavg_round", "StalenessBuffer",
+})
+_MESH_ESCAPE = "# allow-mesh-kwarg"
+
+
+def _callee_name(call: ast.Call) -> str:
+    f = call.func
+    if isinstance(f, ast.Attribute):
+        return f.attr
+    if isinstance(f, ast.Name):
+        return f.id
+    return ""
+
+
+def _mesh_kwarg_problems(tree: ast.AST, lines: list, rel: str) -> list:
+    problems = []
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        if _callee_name(node) not in _CTX_FUNCS:
+            continue
+        for kw in node.keywords:
+            if kw.arg != "mesh":
+                continue
+            line = lines[kw.value.lineno - 1] \
+                if kw.value.lineno - 1 < len(lines) else ""
+            call_line = lines[node.lineno - 1] \
+                if node.lineno - 1 < len(lines) else ""
+            if _MESH_ESCAPE in line or _MESH_ESCAPE in call_line:
+                continue
+            problems.append(
+                f"{rel}:{kw.value.lineno}: deprecated mesh= kwarg on "
+                f"{_callee_name(node)}() — pass "
+                f"ctx=AggContext.for_mesh(...) (or add "
+                f"'{_MESH_ESCAPE}' if the shim itself is under test)")
+    return problems
 
 
 def python_files() -> list:
@@ -36,12 +83,14 @@ def check_file(path: str) -> list:
     if b"\r\n" in raw:
         problems.append(f"{rel}: CRLF line endings")
     text = raw.decode("utf-8")
+    lines = text.split("\n")
     try:
-        ast.parse(text, filename=rel)
+        tree = ast.parse(text, filename=rel)
     except SyntaxError as e:
         problems.append(f"{rel}:{e.lineno}: syntax error: {e.msg}")
         return problems
-    for i, line in enumerate(text.split("\n"), 1):
+    problems.extend(_mesh_kwarg_problems(tree, lines, rel))
+    for i, line in enumerate(lines, 1):
         if line != line.rstrip():
             problems.append(f"{rel}:{i}: trailing whitespace")
         if "\t" in line:

@@ -56,6 +56,15 @@ their own ``shard_map``/jit shardings. ``repro.core.hfl`` compiles the
 rounds against the same layout (rows over all mesh axes, first output
 row-sharded, models replicated); ``repro.sim.env`` places its bank and
 federated data through these helpers when a mesh is configured.
+
+Callers should rarely touch ``ShardedBankSpec`` directly:
+``repro.core.hfl.AggContext`` wraps this layout (mesh + placement +
+donation policy) behind one value that every aggregation entry point,
+the async runtime's buffer flush, and the simulators accept —
+``AggContext.for_mesh(mesh)`` / ``AggContext.single_chip()``. The
+shard-aligned layout (each edge's rows within one shard) is also what
+makes the sharded async edge round *bitwise* equal to single chip; see
+``hfl.make_edge_round``.
 """
 from __future__ import annotations
 

@@ -21,24 +21,46 @@ and ``make_fedavg_round`` return jit-compiled rounds that donate the
 incoming bank buffer, so steady-state training re-uses the bank
 allocation instead of copying it every round.
 
-Multi-host banks: every aggregation entry point and round factory takes
-an optional ``mesh``. With a mesh the bank's device axis is sharded over
-all the mesh's axes (layout contract: ``flatbank.ShardedBankSpec``). The
-round body is the *same program* compiled under GSPMD with row-sharded
-in/out shardings — device-local training partitions trivially on the row
-axis (and so keeps exact RNG parity with the single-chip path) — while
-the Pallas launches, which GSPMD cannot partition, are wrapped in
+Multi-host banks — the **AggContext contract**: every aggregation entry
+point and round factory takes an optional ``ctx: AggContext``, the one
+object that carries the placement policy (mesh + the
+``flatbank.ShardedBankSpec`` row layout + buffer-donation policy).
+Build it once — ``AggContext.for_mesh(mesh)`` or
+``AggContext.single_chip()`` — and thread it everywhere; the old
+per-call ``mesh=`` kwargs survive as one-cycle deprecation shims.
+
+With a sharded context the bank's device axis is sharded over all the
+mesh's axes (layout contract: ``flatbank.ShardedBankSpec``). The round
+body is the *same program* compiled under GSPMD with row-sharded in/out
+shardings — device-local training partitions trivially on the row axis
+(and so keeps exact RNG parity with the single-chip path) — while the
+Pallas launches, which GSPMD cannot partition, are wrapped in
 ``shard_map``: each shard runs ``segment_agg`` on its local rows and the
 partial edge sums meet in an axis-scoped ``psum``
 (``segment_agg_sharded``); the edge->device resync is a shard-local
 ``segment_broadcast`` of the replicated edge matrix, so the full (N, P)
-bank never materializes on one device. Without a mesh the single-chip
-path is unchanged.
+bank never materializes on one device. Small (E, P)-scale aggregations
+(the cloud step, staleness-buffer flushes) instead run the plain kernel
+replicated on every shard (``AggContext.segment_agg_small``) — bitwise
+identical to the single-chip launch for *any* row count. Without a mesh
+the single-chip path is unchanged.
+
+Bitwise contract of the sharded paths: zero-weight rows and zero psum
+partials are reduction-neutral (``fma(0, x, acc) == acc``), so when
+every edge's rows live within a single shard — the
+``flatbank.ShardedBankSpec`` layout contract — the psum-combined
+aggregation reproduces the single-chip accumulation chain exactly and
+the sharded round matches the single-chip round **bit for bit**
+(tests/test_sharded_bank.py pins this for the async edge round on
+1/2/4-shard and 2x2 meshes). An edge spanning shards splits the chain
+at a psum and parity drops to tolerance-level (f32 reduction order).
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
-from typing import Callable
+import warnings
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
@@ -130,8 +152,186 @@ def _sharded_segment_agg(mesh, num_segments: int):
                    in_shardings=(row, row, row), out_shardings=rep)
 
 
+@functools.lru_cache(maxsize=None)
+def _rep_segment_agg(mesh, num_segments: int):
+    """jit'd replicated launch: the plain ``segment_agg`` computed
+    identically on every shard (``AggContext.segment_agg_small``'s mesh
+    path). Same launch shape as single chip -> bitwise-identical result
+    for any row count, and the (E, P)-scale inputs are tiny."""
+    from jax.sharding import NamedSharding
+    rep = NamedSharding(mesh, P())
+    return jax.jit(_smap_segment_agg_rep(mesh, num_segments),
+                   in_shardings=(rep, rep, rep), out_shardings=rep)
+
+
+@functools.lru_cache(maxsize=None)
+def _jit_masked_resync(mesh, out_dtype):
+    """jit'd sharded ``masked_resync``: replicated (E, P) edge matrix,
+    row-sharded bank / segment ids, replicated alive mask -> row-sharded
+    bank. The ``segment_broadcast`` is shard-local (each shard gathers
+    only its own rows); the keep/overwrite ``where`` partitions on the
+    row axis under GSPMD."""
+    from jax.sharding import NamedSharding
+    row = NamedSharding(mesh, P(_mesh_axes(mesh)))
+    rep = NamedSharding(mesh, P())
+
+    def resync(edge_mat, bank_mat, edge_assign, alive):
+        out = _smap_segment_broadcast(mesh, out_dtype)(edge_mat,
+                                                       edge_assign)
+        keep = alive[edge_assign]
+        return jnp.where(keep[:, None], out, bank_mat)
+
+    return jax.jit(resync, in_shardings=(rep, row, row, rep),
+                   out_shardings=row)
+
+
+# ---------------------------------------------------------------------------
+# AggContext — the one aggregation/placement contract
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class AggContext:
+    """The aggregation contract every ``hfl`` entry point runs under.
+
+    One frozen, hashable object in place of the ``mesh=`` kwarg sprawl:
+    it carries the mesh (or ``None`` for single chip), the
+    ``flatbank.ShardedBankSpec`` row-layout policy (bank rows shard over
+    *all* mesh axes; edge/global models replicate), and whether round
+    factories donate the incoming bank buffer. Build it once —
+    :meth:`for_mesh` / :meth:`single_chip` — and pass it to
+    ``weighted_aggregate`` / ``cloud_aggregate`` / ``masked_resync`` /
+    ``make_cloud_round`` / ``make_edge_round`` / ``make_fedavg_round``,
+    to ``runtime.buffer.StalenessBuffer(ctx=...)``, and to
+    ``sim.EnvConfig(agg=...)``.
+    """
+    mesh: Optional[object] = None        # jax.sharding.Mesh | None
+    donate: bool = True
+
+    # -- constructors -------------------------------------------------
+    @classmethod
+    def single_chip(cls, *, donate: bool = True) -> "AggContext":
+        """No mesh: every entry point takes the unchanged one-device
+        path and the placement helpers are identities."""
+        return cls(mesh=None, donate=donate)
+
+    @classmethod
+    def for_mesh(cls, mesh, *, donate: bool = True) -> "AggContext":
+        """Sharded context over ``mesh`` (usually
+        ``launch.mesh.make_bank_mesh`` / ``derive_bank_mesh``): bank
+        rows shard over all its axes."""
+        if mesh is None:
+            raise ValueError("AggContext.for_mesh needs a mesh; use "
+                             "AggContext.single_chip() for one device")
+        try:
+            axes = tuple(mesh.axis_names)
+            n_dev = int(mesh.size)
+        except (AttributeError, TypeError) as e:
+            raise TypeError(f"AggContext.for_mesh expects a "
+                            f"jax.sharding.Mesh, got {type(mesh).__name__}"
+                            ) from e
+        if not axes or n_dev < 1:
+            raise ValueError("AggContext.for_mesh: mesh has no axes or "
+                             "no devices")
+        return cls(mesh=mesh, donate=donate)
+
+    # -- introspection ------------------------------------------------
+    @property
+    def sharded(self) -> bool:
+        return self.mesh is not None
+
+    @property
+    def axes(self) -> tuple:
+        """Mesh axis names the bank rows shard over (() on one chip)."""
+        return () if self.mesh is None else tuple(self.mesh.axis_names)
+
+    @property
+    def n_shards(self) -> int:
+        return 1 if self.mesh is None else int(self.mesh.size)
+
+    def check_rows(self, n: int) -> int:
+        """Raise ValueError unless ``n`` rows divide over the shards
+        (the single shared divisibility contract); returns the rows per
+        shard (``n`` itself on single chip)."""
+        if self.mesh is None:
+            return int(n)
+        return flatbank.local_rows(n, self.mesh)
+
+    def donate_argnums(self, *argnums: int) -> tuple:
+        return tuple(argnums) if self.donate else ()
+
+    # -- placement policy (flatbank.ShardedBankSpec layout) -----------
+    def row_sharding(self):
+        """NamedSharding for row-axis data; None on a single chip."""
+        if self.mesh is None:
+            return None
+        from jax.sharding import NamedSharding
+        return NamedSharding(self.mesh, P(self.axes))
+
+    def replicated_sharding(self):
+        if self.mesh is None:
+            return None
+        from jax.sharding import NamedSharding
+        return NamedSharding(self.mesh, P())
+
+    def place_rows(self, arr):
+        """Commit an array with a leading device-row axis to the row
+        layout (identity on one chip)."""
+        if self.mesh is None:
+            return arr
+        self.check_rows(jax.tree.leaves(arr)[0].shape[0])
+        return jax.device_put(arr, self.row_sharding())
+
+    def place_replicated(self, tree):
+        """Replicate a pytree on every shard (identity on one chip)."""
+        if self.mesh is None:
+            return tree
+        rep = self.replicated_sharding()
+        return jax.tree.map(lambda a: jax.device_put(a, rep), tree)
+
+    def place_bank(self, bank):
+        """Shard a model bank's leaves row-wise (identity on one chip);
+        validates the ``ShardedBankSpec`` layout contract."""
+        if self.mesh is None:
+            return bank
+        return flatbank.sharded_bank_spec(bank, self.mesh).place_bank(bank)
+
+    # -- kernel routing -----------------------------------------------
+    def segment_agg_small(self, mat, weights, segment_ids,
+                          num_segments: int):
+        """Aggregate a *small* (K, P) stack (edge matrices, staleness
+        flushes): the plain fused kernel, computed replicated on every
+        shard under a mesh — bitwise-identical to the single-chip
+        launch for any K (no psum, no divisibility condition)."""
+        if self.mesh is None:
+            return ops.segment_agg(mat, weights, segment_ids,
+                                   num_segments)
+        return _rep_segment_agg(self.mesh, int(num_segments))(
+            mat, weights, segment_ids)
+
+
+def _resolve_ctx(ctx, mesh, where: str) -> AggContext:
+    """Normalize the (ctx, deprecated mesh kwarg) pair every entry
+    point accepts into one AggContext."""
+    if ctx is not None and mesh is not None:
+        raise ValueError(f"{where}: pass ctx=AggContext(...) or the "
+                         f"deprecated mesh=, not both")
+    if mesh is not None:
+        warnings.warn(
+            f"{where}(mesh=...) is deprecated; build the context once "
+            f"with hfl.AggContext.for_mesh(mesh) and pass ctx= instead "
+            f"(the mesh= kwarg goes away next cycle)",
+            DeprecationWarning, stacklevel=3)
+        return AggContext.for_mesh(mesh)
+    if ctx is None:
+        return AggContext.single_chip()
+    if not isinstance(ctx, AggContext):
+        raise TypeError(f"{where}: ctx must be an hfl.AggContext, got "
+                        f"{type(ctx).__name__}")
+    return ctx
+
+
 def weighted_aggregate(bank, weights, segment_ids, num_segments: int,
-                       mesh=None):
+                       *, ctx: Optional[AggContext] = None, mesh=None):
     """Generic dataset-size-weighted aggregation on the flat bank.
 
     bank leaves: (N, ...); weights: (N,) |D_i|; segment_ids: (N,) edge of
@@ -139,44 +339,48 @@ def weighted_aggregate(bank, weights, segment_ids, num_segments: int,
         out_j = sum_{i in j} w_i x_i / sum_{i in j} w_i          (Eq. 1)
 
     One ``segment_agg`` kernel launch over the flattened ``(N, P)``
-    bank; leaf dtypes are restored on unflatten. With ``mesh`` the rows
-    shard over the mesh and each shard launches on its local rows only
-    (partial sums combined by ``psum``); the result is replicated.
+    bank; leaf dtypes are restored on unflatten. With a sharded ``ctx``
+    the rows shard over the mesh and each shard launches on its local
+    rows only (partial sums combined by ``psum``); the result is
+    replicated.
     """
+    ctx = _resolve_ctx(ctx, mesh, "weighted_aggregate")
     spec = flatbank.bank_spec(bank)
     mat = spec.flatten(bank)
-    if mesh is None:
+    if ctx.mesh is None:
         out = ops.segment_agg(mat, weights, segment_ids, num_segments)
     else:
-        _check_rows(mat.shape[0], mesh)
-        out = _sharded_segment_agg(mesh, int(num_segments))(
+        ctx.check_rows(mat.shape[0])
+        out = _sharded_segment_agg(ctx.mesh, int(num_segments))(
             mat, weights, segment_ids)
     return spec.unflatten(out)
 
 
 def edge_aggregate(bank, device_sizes, edge_assign, n_edges: int,
-                   mesh=None):
+                   *, ctx: Optional[AggContext] = None, mesh=None):
     """Eq. 1: w_j^e = Σ_i |D_i| w_i / Σ_i |D_i| over the devices of edge j."""
+    ctx = _resolve_ctx(ctx, mesh, "edge_aggregate")
     return weighted_aggregate(bank, device_sizes, edge_assign, n_edges,
-                              mesh=mesh)
+                              ctx=ctx)
 
 
-def cloud_aggregate(edge_models, edge_sizes, mesh=None):
+def cloud_aggregate(edge_models, edge_sizes, *,
+                    ctx: Optional[AggContext] = None, mesh=None):
     """Eq. 2: w = Σ_j |D_j| w_j^e / Σ_j |D_j| (single segment). The edge
-    matrix is small; it only shards when n_edges divides the mesh."""
+    matrix is small, so under a mesh every shard computes the plain
+    launch replicated (``AggContext.segment_agg_small``) — bitwise
+    identical to single chip for any number of edges."""
+    ctx = _resolve_ctx(ctx, mesh, "cloud_aggregate")
     n = edge_sizes.shape[0]
     spec = flatbank.bank_spec(edge_models)
     seg = jnp.zeros((n,), jnp.int32)
-    if mesh is not None and n % int(mesh.size) == 0:
-        out = _sharded_segment_agg(mesh, 1)(
-            spec.flatten(edge_models), edge_sizes, seg)
-    else:
-        out = ops.segment_agg(spec.flatten(edge_models), edge_sizes,
-                              seg, 1)
+    out = ctx.segment_agg_small(spec.flatten(edge_models), edge_sizes,
+                                seg, 1)
     return spec.unflatten_model(out[0])
 
 
-def masked_resync(edge_mat, bank_mat, edge_assign, alive):
+def masked_resync(edge_mat, bank_mat, edge_assign, alive, *,
+                  ctx: Optional[AggContext] = None):
     """Fault-tolerant edge→device resync: broadcast the ``(E, P)`` edge
     matrix to the ``(N, P)`` bank through ``segment_broadcast``, but
     only onto rows of *alive* edges — rows belonging to dropped /
@@ -187,11 +391,24 @@ def masked_resync(edge_mat, bank_mat, edge_assign, alive):
 
     Used by the async runtime's churn handling (a rejoining edge's rows
     sync to the current global model while every other row stays put)
-    and available to degraded synchronous rounds."""
-    out = ops.segment_broadcast(edge_mat, edge_assign,
-                                out_dtype=bank_mat.dtype)
-    keep = jnp.asarray(alive, bool)[edge_assign]
-    return jnp.where(keep[:, None], out, bank_mat)
+    and available to degraded synchronous rounds.
+
+    With a sharded ``ctx`` the bank matrix and segment ids stay
+    row-sharded end to end: the broadcast is shard-local and the
+    keep/overwrite ``where`` partitions on the row axis, so the full
+    bank never gathers onto one device and the result is bitwise the
+    single-chip one (the gather copies one edge row per device row).
+    """
+    ctx = _resolve_ctx(ctx, None, "masked_resync")
+    if ctx.mesh is None:
+        out = ops.segment_broadcast(edge_mat, edge_assign,
+                                    out_dtype=bank_mat.dtype)
+        keep = jnp.asarray(alive, bool)[edge_assign]
+        return jnp.where(keep[:, None], out, bank_mat)
+    ctx.check_rows(bank_mat.shape[0])
+    return _jit_masked_resync(ctx.mesh, jnp.dtype(bank_mat.dtype))(
+        edge_mat, bank_mat, jnp.asarray(edge_assign, jnp.int32),
+        jnp.asarray(alive, bool))
 
 
 # ---------------------------------------------------------------------------
@@ -292,7 +509,8 @@ def _jit_round(fn, mesh, n_row_args: int, donate: tuple):
 
 
 def make_cloud_round(loss_fn: Callable, lr: float, batch_size: int,
-                     n_edges: int, max_g1: int, max_g2: int, mesh=None):
+                     n_edges: int, max_g1: int, max_g2: int,
+                     ctx: Optional[AggContext] = None, mesh=None):
     """Builds a jit-compiled ``cloud_round`` (bank buffer donated):
 
     cloud_round(bank, x, y, sizes, edge_assign, g1 (M,), g2 (M,), key)
@@ -308,16 +526,18 @@ def make_cloud_round(loss_fn: Callable, lr: float, batch_size: int,
     ``where``, and resyncs the bank through ``segment_broadcast`` — no
     per-leaf tree traffic inside the scan.
 
-    With ``mesh`` the same body compiles under GSPMD with bank rows,
-    data shards, sizes, and edge assignment partitioned over the mesh
-    axes: training partitions trivially (identical key material to the
-    single-chip program), the edge aggregation runs as per-shard
+    With a sharded ``ctx`` the same body compiles under GSPMD with bank
+    rows, data shards, sizes, and edge assignment partitioned over the
+    mesh axes: training partitions trivially (identical key material to
+    the single-chip program), the edge aggregation runs as per-shard
     ``segment_agg`` launches whose partial sums meet in a ``psum``
     (``shard_map``-wrapped), and the resync ``segment_broadcast`` is
     shard-local — the full (N, P) bank never lands on one device. The
     returned global/edge models are replicated; the returned bank stays
     row-sharded.
     """
+    ctx = _resolve_ctx(ctx, mesh, "make_cloud_round")
+    mesh = ctx.mesh
     local_train = make_local_trainer(loss_fn, lr, batch_size)
 
     def cloud_round(bank, x, y, sizes, edge_assign, g1, g2, key):
@@ -363,7 +583,8 @@ def make_cloud_round(loss_fn: Callable, lr: float, batch_size: int,
         bank = broadcast_model(global_model, x.shape[0])
         return bank, global_model, spec.unflatten(edge_mat)
 
-    return _jit_round(cloud_round, mesh, n_row_args=5, donate=(0,))
+    return _jit_round(cloud_round, mesh, n_row_args=5,
+                      donate=ctx.donate_argnums(0))
 
 
 # ---------------------------------------------------------------------------
@@ -371,7 +592,8 @@ def make_cloud_round(loss_fn: Callable, lr: float, batch_size: int,
 # ---------------------------------------------------------------------------
 
 def make_edge_round(loss_fn: Callable, lr: float, batch_size: int,
-                    n_edges: int, max_g1: int, max_g2: int):
+                    n_edges: int, max_g1: int, max_g2: int,
+                    ctx: Optional[AggContext] = None):
     """Builds a jit-compiled *edge-local* round (bank buffer donated):
 
     edge_round(bank, x, y, sizes, edge_assign, edge_id, g1, g2,
@@ -393,9 +615,25 @@ def make_edge_round(loss_fn: Callable, lr: float, batch_size: int,
     of the synchronous round's edge matrix bit for bit (the async-parity
     test in tests/test_async_runtime.py pins this).
 
+    With a sharded ``ctx`` the round compiles under GSPMD exactly like
+    ``make_cloud_round``: bank/data/sizes/assignment row-sharded,
+    training in plain GSPMD (identical key chain — the RNG/grad chain
+    must *never* move inside ``shard_map``, see ROADMAP's PR-2
+    caution), the masked-weight edge aggregation as per-shard
+    ``segment_agg`` launches + psum, and the resync as the shard-local
+    ``segment_broadcast``. Because the mask zeroes every other edge and
+    zero rows/partials are reduction-neutral, the sharded round
+    reproduces the single-chip round **bitwise** whenever the active
+    edge's rows live within one shard — the ``ShardedBankSpec`` layout
+    contract (tests/test_sharded_bank.py pins this on 1/2/4-shard and
+    2x2 meshes). The returned bank stays row-sharded; ``edge_vec`` is
+    replicated.
+
     ``edge_id``/``g1``/``g2`` are traced scalars — one compiled round
     serves every (edge, action) pair the agent picks.
     """
+    ctx = _resolve_ctx(ctx, None, "make_edge_round")
+    mesh = ctx.mesh
     local_train = make_local_trainer(loss_fn, lr, batch_size)
 
     def edge_round(bank, x, y, sizes, edge_assign, edge_id, g1, g2,
@@ -406,9 +644,16 @@ def make_edge_round(loss_fn: Callable, lr: float, batch_size: int,
         g1_dev = jnp.where(row_active, g1, 0)
         g2_dev = jnp.where(row_active, g2, 0)
 
-        agg = lambda mat: ops.segment_agg(mat, w, edge_assign, n_edges)
-        resync = lambda em: ops.segment_broadcast(
-            em, edge_assign, out_dtype=spec.dtype)
+        if mesh is None:
+            agg = lambda mat: ops.segment_agg(mat, w, edge_assign,
+                                              n_edges)
+            resync = lambda em: ops.segment_broadcast(
+                em, edge_assign, out_dtype=spec.dtype)
+        else:
+            agg = lambda mat: _smap_segment_agg(mesh, n_edges)(
+                mat, w, edge_assign)
+            resync = lambda em: _smap_segment_broadcast(mesh, spec.dtype)(
+                em, edge_assign)
 
         # devices resume from the global snapshot the edge downloaded
         mat = spec.flatten(bank)
@@ -440,7 +685,8 @@ def make_edge_round(loss_fn: Callable, lr: float, batch_size: int,
         edge_vec = jnp.take(edge_mat, edge_id, axis=0)
         return bank, edge_vec
 
-    return jax.jit(edge_round, donate_argnums=(0,))
+    return _jit_round(edge_round, mesh, n_row_args=5,
+                      donate=ctx.donate_argnums(0))
 
 
 # ---------------------------------------------------------------------------
@@ -448,13 +694,16 @@ def make_edge_round(loss_fn: Callable, lr: float, batch_size: int,
 # ---------------------------------------------------------------------------
 
 def make_fedavg_round(loss_fn: Callable, lr: float, batch_size: int,
-                      max_g1: int, mesh=None):
+                      max_g1: int, ctx: Optional[AggContext] = None,
+                      mesh=None):
     """FedAvg with random participation: selected devices run γ1 local
     epochs, the cloud aggregates them directly (γ2 ≡ 1). Jit-compiled,
     bank donated; the single-segment aggregation runs on the flat bank.
-    With ``mesh`` the round compiles under GSPMD like
+    With a sharded ``ctx`` the round compiles under GSPMD like
     ``make_cloud_round`` (row-sharded bank and data, per-shard kernel +
     psum aggregation, replicated global model)."""
+    ctx = _resolve_ctx(ctx, mesh, "make_fedavg_round")
+    mesh = ctx.mesh
     local_train = make_local_trainer(loss_fn, lr, batch_size)
 
     def round_(bank, x, y, sizes, participate, g1, key):
@@ -473,4 +722,5 @@ def make_fedavg_round(loss_fn: Callable, lr: float, batch_size: int,
         bank = broadcast_model(global_model, n)
         return bank, global_model
 
-    return _jit_round(round_, mesh, n_row_args=5, donate=(0,))
+    return _jit_round(round_, mesh, n_row_args=5,
+                      donate=ctx.donate_argnums(0))

@@ -21,8 +21,17 @@ one env call = one edge upload event; DESIGN.md §Async runtime):
   async-fedavg : fixed (γ1, γ2) at every upload event; the cloud
                  aggregates the staleness-decayed update buffer
   async-arena  : the PPO agent picks (γ1, γ2) per edge at its upload
-                 event (``run_async_arena``; train with ``train_agent``
-                 on an ``AsyncHFLEnv`` — the env API is identical)
+                 event (train with ``train_agent`` on an
+                 ``AsyncHFLEnv`` — the env API is identical)
+
+**Unified runner surface**: every scheme is a :class:`SchemeSpec` in
+the :data:`SCHEMES` registry — one callable shape
+``spec(env, agent=None, **overrides)`` with the per-scheme defaults
+(``g1``/``frac``/``eps``/...) living in the spec, not in drifting
+function signatures. ``benchmarks/*`` and ``examples/quickstart.py``
+dispatch through :func:`run_scheme`; the historical ``run_*`` functions
+survive as thin wrappers that forward into the registry (so their
+defaults cannot drift from it).
 """
 from __future__ import annotations
 
@@ -36,10 +45,77 @@ from repro.core.reward import UPSILON
 
 
 # ---------------------------------------------------------------------------
+# the unified scheme-runner surface
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class SchemeSpec:
+    """One synchronization scheme behind the unified runner surface.
+
+    ``runner(env, **params)`` (or ``runner(env, agent, **params)`` when
+    ``needs_agent``) holds the logic; ``defaults`` — a tuple of
+    ``(name, value)`` pairs so the spec stays hashable — is the single
+    home of the scheme's tunables. Calling the spec merges keyword
+    overrides over the defaults and rejects unknown parameters, so
+    every scheme exposes the same calling convention:
+
+        SCHEMES["vanilla-hfl"](env, g1=2, g2=2)
+        SCHEMES["arena"](env, agent=agent)
+    """
+    name: str
+    runner: Callable
+    defaults: tuple = ()
+    needs_agent: bool = False
+    needs_async: bool = False
+    doc: str = ""
+
+    @property
+    def params(self) -> dict:
+        return dict(self.defaults)
+
+    def __call__(self, env, agent=None, **overrides):
+        params = self.params
+        bad = sorted(set(overrides) - set(params))
+        if bad:
+            raise TypeError(
+                f"scheme {self.name!r} got unknown parameter(s) {bad}; "
+                f"it accepts {sorted(params) or 'no parameters'}")
+        if self.needs_agent and agent is None:
+            raise ValueError(f"scheme {self.name!r} needs a trained "
+                             f"agent (pass agent=...)")
+        if self.needs_async and not hasattr(env, "buffer_k"):
+            raise TypeError(
+                f"scheme {self.name!r} drives an AsyncHFLEnv (one step "
+                f"= one upload event), got {type(env).__name__}")
+        params.update(overrides)
+        if self.needs_agent:
+            return self.runner(env, agent, **params)
+        return self.runner(env, **params)
+
+
+def run_scheme(name: str, env, *, agent=None, **overrides):
+    """The one dispatch point ``benchmarks/*`` and ``examples/``
+    use: look the scheme up in :data:`SCHEMES` and run it with
+    ``overrides`` merged over the registry defaults."""
+    try:
+        spec = SCHEMES[name]
+    except KeyError:
+        raise KeyError(f"unknown scheme {name!r}; available: "
+                       f"{sorted(SCHEMES)}") from None
+    return spec(env, agent=agent, **overrides)
+
+
+def _given(**kw) -> dict:
+    """Drop unset (None) kwargs so the thin ``run_*`` wrappers inherit
+    their defaults from the registry instead of duplicating them."""
+    return {k: v for k, v in kw.items() if v is not None}
+
+
+# ---------------------------------------------------------------------------
 # static schemes
 # ---------------------------------------------------------------------------
 
-def run_vanilla_fl(env, g1: int = 20, frac: float = 0.8, seed: int = 0):
+def _vanilla_fl(env, *, g1: int, frac: float, seed: int):
     """FedAvg: γ1 local epochs, direct cloud sync (γ2=1), random
     participation. (Edge agg followed immediately by cloud agg equals the
     global weighted mean, so the HFL env expresses FL exactly.)"""
@@ -55,7 +131,7 @@ def run_vanilla_fl(env, g1: int = 20, frac: float = 0.8, seed: int = 0):
     return _history(env)
 
 
-def run_vanilla_hfl(env, g1: int = 5, g2: int = 4):
+def _vanilla_hfl(env, *, g1: int, g2: int):
     env.reset()
     done = False
     m = env.cfg.n_edges
@@ -78,7 +154,7 @@ def _time_equalizing_freqs(env, budget_epochs: float = 20.0):
     return g1, g2
 
 
-def run_var_freq_a(env):
+def _var_freq_a(env):
     env.reset()
     g1, g2 = _time_equalizing_freqs(env)
     done = False
@@ -87,7 +163,7 @@ def run_var_freq_a(env):
     return _history(env)
 
 
-def run_var_freq_b(env):
+def _var_freq_b(env):
     """Var-Freq B: A, then reduce frequencies of fast-but-power-hungry
     edges (§2.2: 'appropriately reduce the aggregation frequency of fast
     devices with high energy consumption')."""
@@ -105,8 +181,7 @@ def run_var_freq_b(env):
     return _history(env)
 
 
-def run_favor(env, g1: int = 20, frac: float = 0.6, eps: float = 0.2,
-              seed: int = 0):
+def _favor(env, *, g1: int, frac: float, eps: float, seed: int):
     """Favor-style selection: per-device EMA value of the global accuracy
     delta when it participates; pick top-frac with ε-greedy exploration."""
     rng = np.random.default_rng(seed)
@@ -160,18 +235,17 @@ def share_topology(env) -> np.ndarray:
     return assign
 
 
-def run_share(env, g1: int = 5, g2: int = 4):
+def _share(env, *, g1: int, g2: int):
     assign = share_topology(env)
     env.set_topology(assign)
-    return run_vanilla_hfl(env, g1, g2)
+    return _vanilla_hfl(env, g1=g1, g2=g2)
 
 
 # ---------------------------------------------------------------------------
 # asynchronous runtime schemes (event-driven AsyncHFLEnv)
 # ---------------------------------------------------------------------------
 
-def run_async_fedavg(env, g1: int = 5, g2: int = 4,
-                     max_events: int = 10000):
+def _async_fedavg(env, *, g1: int, g2: int, max_events: int):
     """Async FedAvg-over-HFL: every edge re-launches with the same
     fixed (γ1, γ2) at each of its upload events; the cloud advances on
     the staleness-decayed buffer. ``env`` must be an ``AsyncHFLEnv``
@@ -184,20 +258,8 @@ def run_async_fedavg(env, g1: int = 5, g2: int = 4,
     return _history(env)
 
 
-def run_async_arena(env, agent):
-    """One deterministic evaluation episode of a trained agent on the
-    async env: the agent acts per edge at its upload event (the 2-dim
-    action programs that edge's next round)."""
-    s = env.reset()
-    done = False
-    while not done:
-        a, _, _ = agent.act(s, deterministic=True)
-        s, _, done, _ = env.step(a)
-    return _history(env)
-
-
 # ---------------------------------------------------------------------------
-# learned schemes (Arena / Hwamei)
+# learned schemes (Arena / Hwamei / async-Arena)
 # ---------------------------------------------------------------------------
 
 @dataclasses.dataclass
@@ -244,8 +306,11 @@ def train_agent(env, episodes: int, *, enhancements: bool = True,
     return agent, log
 
 
-def run_learned(env, agent):
-    """One evaluation episode with a trained agent (deterministic)."""
+def _learned(env, agent):
+    """One evaluation episode with a trained agent (deterministic).
+    Serves arena and hwamei on the synchronous env (the agents differ,
+    not the episode loop) and async-arena on the event-driven env (the
+    2-dim action programs the deciding edge's next round)."""
     s = env.reset()
     done = False
     while not done:
@@ -264,12 +329,83 @@ def _history(env):
             "rounds": len(env.acc_hist)}
 
 
-SCHEMES: dict[str, Callable] = {
-    "vanilla-fl": run_vanilla_fl,
-    "vanilla-hfl": run_vanilla_hfl,
-    "var-freq-a": run_var_freq_a,
-    "var-freq-b": run_var_freq_b,
-    "favor": run_favor,
-    "share": run_share,
-    "async-fedavg": run_async_fedavg,    # needs an AsyncHFLEnv
-}
+SCHEMES: dict[str, SchemeSpec] = {s.name: s for s in [
+    SchemeSpec("vanilla-fl", _vanilla_fl,
+               defaults=(("g1", 20), ("frac", 0.8), ("seed", 0)),
+               doc="FedAvg: random participation, γ2 ≡ 1"),
+    SchemeSpec("vanilla-hfl", _vanilla_hfl,
+               defaults=(("g1", 5), ("g2", 4)),
+               doc="fixed (γ1, γ2) at every edge"),
+    SchemeSpec("var-freq-a", _var_freq_a,
+               doc="per-edge time-equalizing frequencies (§2.2)"),
+    SchemeSpec("var-freq-b", _var_freq_b,
+               doc="var-freq-a minus energy-hungry fast edges"),
+    SchemeSpec("favor", _favor,
+               defaults=(("g1", 20), ("frac", 0.6), ("eps", 0.2),
+                         ("seed", 0)),
+               doc="FedAvg + EMA-value ε-greedy device selection"),
+    SchemeSpec("share", _share, defaults=(("g1", 5), ("g2", 4)),
+               doc="label-histogram topology shaping + vanilla-hfl"),
+    SchemeSpec("async-fedavg", _async_fedavg,
+               defaults=(("g1", 5), ("g2", 4), ("max_events", 10000)),
+               needs_async=True,
+               doc="fixed (γ1, γ2) per upload event, buffered cloud"),
+    SchemeSpec("async-arena", _learned, needs_agent=True,
+               needs_async=True,
+               doc="trained PPO agent acting per upload event"),
+    SchemeSpec("arena", _learned, needs_agent=True,
+               doc="this paper's PPO agent (deterministic eval)"),
+    SchemeSpec("hwamei", _learned, needs_agent=True,
+               doc="conference-version agent (train with "
+                   "enhancements=False)"),
+]}
+
+
+# ---------------------------------------------------------------------------
+# thin wrappers — the historical API, forwarding into the registry so
+# the per-scheme defaults live in exactly one place (None = inherit)
+# ---------------------------------------------------------------------------
+
+def run_vanilla_fl(env, g1: Optional[int] = None,
+                   frac: Optional[float] = None,
+                   seed: Optional[int] = None):
+    return run_scheme("vanilla-fl", env,
+                      **_given(g1=g1, frac=frac, seed=seed))
+
+
+def run_vanilla_hfl(env, g1: Optional[int] = None,
+                    g2: Optional[int] = None):
+    return run_scheme("vanilla-hfl", env, **_given(g1=g1, g2=g2))
+
+
+def run_var_freq_a(env):
+    return run_scheme("var-freq-a", env)
+
+
+def run_var_freq_b(env):
+    return run_scheme("var-freq-b", env)
+
+
+def run_favor(env, g1: Optional[int] = None, frac: Optional[float] = None,
+              eps: Optional[float] = None, seed: Optional[int] = None):
+    return run_scheme("favor", env,
+                      **_given(g1=g1, frac=frac, eps=eps, seed=seed))
+
+
+def run_share(env, g1: Optional[int] = None, g2: Optional[int] = None):
+    return run_scheme("share", env, **_given(g1=g1, g2=g2))
+
+
+def run_async_fedavg(env, g1: Optional[int] = None,
+                     g2: Optional[int] = None,
+                     max_events: Optional[int] = None):
+    return run_scheme("async-fedavg", env,
+                      **_given(g1=g1, g2=g2, max_events=max_events))
+
+
+def run_async_arena(env, agent):
+    return run_scheme("async-arena", env, agent=agent)
+
+
+def run_learned(env, agent):
+    return run_scheme("arena", env, agent=agent)

@@ -165,16 +165,30 @@ def segment_agg_sharded(bank, weights, segment_ids, num_segments: int,
     rows partitioned over ``axis_names``. Each shard reduces its local
     ``(N_local, P)`` rows with one kernel launch; the (E, P) partial
     edge sums and (E,) weight sums are combined with an axis-scoped
-    ``psum`` and normalized, so the returned (E, P) means are replicated
-    on every shard and equal the single-chip result up to f32
-    reduction-order error. Empty segments (globally) return zeros.
+    ``psum`` and normalized with the same multiply-by-reciprocal the
+    single-chip kernel fuses in, so the returned (E, P) means are
+    replicated on every shard and equal the single-chip result up to
+    f32 reduction-order error — and **bitwise** when every segment's
+    nonzero-weight rows live within a single shard (the
+    ``ShardedBankSpec`` layout contract): zero-weight rows and zero
+    psum partials are reduction-neutral (``fma(0, x, acc) == acc``),
+    so the owner shard reproduces the single-chip accumulation chain
+    exactly. A segment spanning shards splits that chain at a psum and
+    the result differs in the last ulp. Empty segments (globally)
+    return zeros.
     """
     sums, wsum = segment_sum_partial(bank, weights, segment_ids,
                                      num_segments, bn=bn,
                                      interpret=interpret)
     sums = jax.lax.psum(sums, axis_names)
     wsum = jax.lax.psum(wsum, axis_names)
-    return sums / jnp.maximum(wsum, 1e-9)[:, None]
+    # normalize exactly like the single-chip kernel: multiply by the
+    # reciprocal (``acc * inv``), not divide — division rounds
+    # differently, and the async edge round's bitwise-parity contract
+    # (core.hfl.AggContext) needs the two paths to agree to the bit
+    # whenever the summation itself is (shard-alignment) exact.
+    inv = 1.0 / jnp.maximum(wsum, 1e-9)
+    return sums * inv[:, None]
 
 
 def _segment_bcast_kernel(seg_ref, m_ref, o_ref):

@@ -94,6 +94,19 @@ def derive_bank_mesh(hfl_mesh: Mesh) -> Mesh:
     return Mesh(devices[0, :, :, 0, 0], BANK_AXES)
 
 
+def make_bank_context(n_edge_shards: int, fl: int = 1, devices=None,
+                      *, donate: bool = True):
+    """One-stop constructor for the aggregation surface: a bank mesh
+    wrapped in the ``repro.core.hfl.AggContext`` every ``hfl`` entry
+    point, ``runtime.buffer`` flush, and ``sim.env`` accepts —
+    ``make_bank_context(4)`` is ``AggContext.for_mesh(make_bank_mesh(4))``.
+    (Lazy import: this module must stay importable before jax device
+    init, and ``hfl`` pulls in the kernel stack.)"""
+    from repro.core.hfl import AggContext
+    return AggContext.for_mesh(
+        make_bank_mesh(n_edge_shards, fl, devices), donate=donate)
+
+
 # ---------------------------------------------------------------------------
 # parameter PartitionSpecs
 # ---------------------------------------------------------------------------

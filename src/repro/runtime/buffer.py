@@ -11,9 +11,14 @@ with ``s`` a staleness-decay function (Hu et al., arXiv:2107.11415;
 FedBuff).  Because the decay **folds into the weight vector**, the
 flush is exactly the dataset-size-weighted segment mean the synchronous
 path already computes — one fused ``segment_agg`` Pallas launch on the
-stacked ``(K, P)`` update matrix, and under a mesh the *unchanged*
-``shard_map`` + psum path from ``repro.core.hfl.weighted_aggregate``.
-The numpy oracle is ``repro.kernels.ref.staleness_aggregate_ref``.
+stacked ``(K, P)`` update matrix. Under a sharded
+``repro.core.hfl.AggContext`` the stack is (E, P)-scale, so every shard
+computes the *same plain launch replicated*
+(``AggContext.segment_agg_small``) — bitwise-identical to the
+single-chip flush for **any** K (no psum, no K-divisibility condition),
+which is what lets the sharded async runtime reproduce single-chip
+trajectories bit for bit. The numpy oracle is
+``repro.kernels.ref.staleness_aggregate_ref``.
 
 Flush order is canonical (sorted by (edge, arrival)) so that with zero
 decay and ``capacity == n_edges`` the flush is *bitwise* identical to
@@ -23,7 +28,6 @@ in.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
 
 import jax.numpy as jnp
 import numpy as np
@@ -81,20 +85,28 @@ class StalenessBuffer:
     ``capacity`` updates are held; ``flush(version)`` aggregates them
     with staleness-decayed weights into one ``(P,)`` global update and
     empties the buffer. Aggregation runs through the fused
-    ``segment_agg`` kernel — with ``mesh`` (and K divisible by the mesh
-    size) through the sharded ``shard_map`` + psum path.
+    ``segment_agg`` kernel — with a sharded ``ctx``
+    (``hfl.AggContext``) every shard computes the plain launch
+    replicated, bitwise-identical to single chip for any K. The old
+    ``mesh=`` kwarg survives as a one-cycle deprecation shim.
     """
 
     def __init__(self, capacity: int, decay: str = "poly",
-                 decay_a: float = 0.5, mesh=None):
+                 decay_a: float = 0.5, ctx=None, mesh=None):
+        from repro.core import hfl                 # local: avoid cycle
         if capacity < 1:
             raise ValueError(f"buffer capacity must be >= 1, got {capacity}")
         self.capacity = int(capacity)
         self.decay = decay
         self.decay_a = float(decay_a)
-        self.mesh = mesh
+        self.ctx = hfl._resolve_ctx(ctx, mesh, "StalenessBuffer")
         self._slots: list[_Slot] = []
         self._arrivals = 0
+
+    @property
+    def mesh(self):
+        """Deprecated alias for ``self.ctx.mesh``."""
+        return self.ctx.mesh
 
     def __len__(self) -> int:
         return len(self._slots)
@@ -133,8 +145,8 @@ class StalenessBuffer:
             out = (Σ_j w_j s(τ_j) u_j + m·g) / (Σ_j w_j s(τ_j) + m)
                 = c·survivor_mean + (1-c)·g,   c = Σv / (Σv + m)
 
-        — still one fused ``segment_agg`` launch (sharded path
-        included). Numpy oracle: ``ref.coverage_aggregate_ref``. With
+        — still one fused ``segment_agg`` launch (replicated per shard
+        under a mesh). Numpy oracle: ``ref.coverage_aggregate_ref``. With
         ``anchor=None`` (the default) the code path is byte-identical
         to the fault-free flush.
         """
@@ -170,20 +182,16 @@ class StalenessBuffer:
             vecs.append(jnp.asarray(anchor, vecs[0].dtype))
             w = np.concatenate([w, np.float32([anchor_weight])])
         stack = jnp.stack(vecs)
-        glob = _aggregate(stack, jnp.asarray(w), self.mesh)
+        glob = _aggregate(stack, jnp.asarray(w), self.ctx)
         return glob, info
 
 
-def _aggregate(stack, w, mesh: Optional[object]):
+def _aggregate(stack, w, ctx):
     """One-segment staleness-weighted mean of the (K, P) update stack —
-    the same kernel launches the synchronous cloud aggregation uses."""
-    from repro.core import hfl                     # local: avoid cycle
-    from repro.kernels import ops
+    the same kernel launch the synchronous cloud aggregation uses.
+    Under a sharded ``ctx`` every shard computes it replicated
+    (``AggContext.segment_agg_small``): bitwise the single-chip result
+    for any K."""
     k = stack.shape[0]
     seg = jnp.zeros((k,), jnp.int32)
-    if mesh is not None and k % int(mesh.size) == 0:
-        out = hfl.weighted_aggregate({"u": stack}, w, seg, 1,
-                                     mesh=mesh)["u"]
-    else:
-        out = ops.segment_agg(stack, w, seg, 1)
-    return out[0]
+    return ctx.segment_agg_small(stack, w, seg, 1)[0]

@@ -24,7 +24,13 @@ Determinism contract (tests/test_faults.py):
   round-cost generator;
 * an all-zeros (null) spec schedules no events and makes **no draws**,
   so the runtime reproduces the PR-3 fault-free trajectory *bitwise*
-  (event order, buffer weights, final bank).
+  (event order, buffer weights, final bank);
+* the injector is **mesh-oblivious**: all draws come from its own
+  generator in event-pop order, so a faulty run under a sharded
+  ``repro.core.hfl.AggContext`` sees the *identical* fault sequence as
+  the single-chip run — the churn-join resync goes through the
+  mesh-aware ``hfl.masked_resync`` and the whole faulty trajectory
+  stays bitwise across mesh configs (tests/test_sharded_bank.py).
 """
 from __future__ import annotations
 

@@ -61,8 +61,12 @@ class EnvConfig:
     # re-cluster cadence (profiling module's periodic re-cluster, §3.1)
     churn_prob: float = 0.0
     recluster_every: int = 0
-    # multi-host flat bank: shard the (N, P) model bank's device axis
-    # over this mesh (e.g. launch.mesh.make_bank_mesh); None = one chip
+    # multi-host flat bank: the aggregation context (hfl.AggContext)
+    # every round/flush/resync runs under — build it once with
+    # hfl.AggContext.for_mesh(launch.mesh.make_bank_mesh(...)); None =
+    # single chip. ``mesh`` is the deprecated one-cycle spelling (a
+    # bare mesh, wrapped into a context at env construction).
+    agg: Optional[object] = None
     mesh: Optional[object] = None
     # analytic-mode calibration
     a_max: float = 0.80
@@ -91,6 +95,11 @@ class HFLEnv:
     def __init__(self, cfg: EnvConfig):
         cfg = cfg.fixup()
         self.cfg = cfg
+        # one AggContext carries the mesh / placement / donation policy
+        # for every aggregation this env runs; cfg.mesh is the
+        # deprecated spelling and resolves here once (with the same
+        # one-cycle DeprecationWarning the hfl entry points emit)
+        self.agg_ctx = hfl._resolve_ctx(cfg.agg, cfg.mesh, "EnvConfig")
         self.rng = np.random.default_rng(cfg.seed)
         self.profiles = hardware.DeviceProfiles.sample(
             self.rng, cfg.n_devices, task=cfg.task)
@@ -126,19 +135,16 @@ class HFLEnv:
             loss_fn = lambda p, b: model_mod.cnn_loss(self._apply_fn, p, b)
             self._loss_fn = loss_fn       # AsyncHFLEnv builds edge rounds
             # already jit-compiled; donates the bank buffer per round.
-            # With cfg.mesh the round runs sharded (bank rows split over
-            # the mesh; see repro.core.flatbank.ShardedBankSpec).
+            # With a sharded context the round runs under GSPMD (bank
+            # rows split over the mesh; see flatbank.ShardedBankSpec).
             self._cloud_round = hfl.make_cloud_round(
                 loss_fn, cfg.lr, cfg.batch_size, cfg.n_edges,
-                cfg.gamma_max, cfg.gamma_max, mesh=cfg.mesh)
-            if cfg.mesh is not None:
+                cfg.gamma_max, cfg.gamma_max, ctx=self.agg_ctx)
+            if self.agg_ctx.sharded:
                 # pin the federated data shards to the bank layout once
                 # so no round re-ships (or replicates) the full dataset
-                from repro.core import flatbank
-                sbs = flatbank.sharded_bank_spec(
-                    {"x": self.fed.x}, cfg.mesh)
-                self.fed.x = sbs.place_rows(self.fed.x)
-                self.fed.y = sbs.place_rows(self.fed.y)
+                self.fed.x = self.agg_ctx.place_rows(self.fed.x)
+                self.fed.y = self.agg_ctx.place_rows(self.fed.y)
             self._acc_fn = jax.jit(
                 lambda p, x, y: model_mod.cnn_accuracy(
                     self._apply_fn, p, {"x": x, "y": y}))
@@ -173,12 +179,10 @@ class HFLEnv:
         key = jax.random.PRNGKey(cfg.seed + 1000)  # same w(0) each episode
         if cfg.mode == "real":
             self.bank = hfl.init_bank(self._init_fn, key, cfg.n_devices)
-            if cfg.mesh is not None:
-                # start the episode with the bank already row-sharded so
-                # the first round never materializes it on one chip
-                from repro.core import flatbank
-                self.bank = flatbank.sharded_bank_spec(
-                    self.bank, cfg.mesh).place_bank(self.bank)
+            # start the episode with the bank already row-sharded so the
+            # first round never materializes it on one chip (identity on
+            # a single-chip context)
+            self.bank = self.agg_ctx.place_bank(self.bank)
             self.global_model = hfl.bank_select(self.bank, 0)
             self.edge_models = jax.tree.map(
                 lambda a: jnp.stack([a] * cfg.n_edges),
@@ -399,24 +403,20 @@ class AsyncHFLEnv(HFLEnv):
 
     def __init__(self, cfg: EnvConfig, async_cfg=None, faults=None):
         from repro.runtime import AsyncConfig
-        if cfg.mode == "real" and cfg.mesh is not None:
-            # make_edge_round is single-chip: running it over a
-            # row-sharded bank would silently gather the full (N, P)
-            # bank onto one device, voiding the placement contract the
-            # sharded sync path guarantees (ROADMAP open item
-            # 'Mesh-aware make_edge_round'; the buffered *flush* does
-            # support meshes via StalenessBuffer(mesh=...))
-            raise NotImplementedError(
-                "AsyncHFLEnv real mode does not support EnvConfig.mesh "
-                "yet — the per-edge round is single-chip (see ROADMAP)")
         super().__init__(cfg)
         self.acfg = async_cfg or AsyncConfig()
         self.buffer_k = self.acfg.buffer_k or cfg.n_edges
         self.faults = faults
         if cfg.mode == "real":
+            # with a sharded context the per-edge round compiles under
+            # GSPMD with the bank row-sharded, the masked edge
+            # aggregation as per-shard kernel launches + psum and a
+            # shard-local resync — the full (N, P) bank never lands on
+            # one device, and with shard-aligned edges the trajectory
+            # is bitwise the single-chip one (tests/test_sharded_bank)
             self._edge_round = hfl.make_edge_round(
                 self._loss_fn, cfg.lr, cfg.batch_size, cfg.n_edges,
-                cfg.gamma_max, cfg.gamma_max)
+                cfg.gamma_max, cfg.gamma_max, ctx=self.agg_ctx)
 
     # ------------------------------------------------------------------
     def reset(self) -> np.ndarray:
@@ -454,7 +454,7 @@ class AsyncHFLEnv(HFLEnv):
         self.queue.now = cfg.threshold_time - self.t_re  # after warmup
         self.buffer = StalenessBuffer(
             self.buffer_k, decay=self.acfg.decay,
-            decay_a=self.acfg.decay_a, mesh=cfg.mesh)
+            decay_a=self.acfg.decay_a, ctx=self.agg_ctx)
         self.n_flushes = 0
         self._edge_version = np.zeros(m, np.int64)
         self._last_time = self.queue.now
@@ -527,7 +527,8 @@ class AsyncHFLEnv(HFLEnv):
             mat = hfl.masked_resync(self._edge_mat,
                                     self._spec.flatten(self.bank),
                                     self._edge_assign_j,
-                                    jnp.asarray(alive_1h))
+                                    jnp.asarray(alive_1h),
+                                    ctx=self.agg_ctx)
             self.bank = self._spec.unflatten(mat)
             self.edge_models = self._spec.unflatten(self._edge_mat)
         self._edge_version[j] = self.version

@@ -417,14 +417,39 @@ def test_async_beats_sync_barrier_to_accuracy_target():
     assert t_a < t_s, (t_a, t_s)
 
 
-def test_async_env_real_rejects_mesh():
-    """The per-edge round is single-chip (ROADMAP open item): silently
-    accepting a mesh would gather the full bank onto one device, so the
-    constructor must refuse."""
+def test_async_env_real_accepts_agg_context_bitwise():
+    """The async runtime is mesh-aware (hfl.AggContext): on a 1-shard
+    mesh the trajectory is *bitwise* the plain single-chip run — every
+    event, every flush. (Multi-shard parity runs in the sharded CI tier,
+    tests/test_sharded_bank.py.) The deprecated ``EnvConfig.mesh``
+    spelling must keep working for one cycle, with a warning."""
     from repro.launch import mesh as mesh_lib
-    cfg = EnvConfig(**dict(REAL_CFG, mesh=mesh_lib.make_bank_mesh(1)))
-    with pytest.raises(NotImplementedError):
-        AsyncHFLEnv(cfg, AsyncConfig(buffer_k=2))
+    steps = 4
+
+    def run(cfg):
+        env = AsyncHFLEnv(cfg, AsyncConfig(buffer_k=2, decay="none"))
+        env.reset()
+        traj = []
+        for _ in range(steps):
+            _, r, done, info = env.step(np.array([2.0, 2.0]))
+            traj.append(info["acc"])
+            if done:
+                break
+        return env, traj
+
+    env_p, t_plain = run(EnvConfig(**REAL_CFG))
+    ctx = hfl.AggContext.for_mesh(mesh_lib.make_bank_mesh(1))
+    env_m, t_mesh = run(EnvConfig(**dict(REAL_CFG, agg=ctx)))
+    assert t_mesh == t_plain
+    np.testing.assert_array_equal(np.asarray(env_p._global_vec),
+                                  np.asarray(env_m._global_vec))
+    # deprecated spelling: cfg.mesh -> one-cycle shim with a warning
+    with pytest.warns(DeprecationWarning):
+        env_d = AsyncHFLEnv(
+            EnvConfig(**dict(REAL_CFG,
+                             mesh=mesh_lib.make_bank_mesh(1))),
+            AsyncConfig(buffer_k=2, decay="none"))
+    assert env_d.agg_ctx.sharded
 
 
 def test_async_scheme_registry_and_agent_loop():

@@ -119,8 +119,8 @@ def test_weighted_aggregate_sharded_matches_oracle(shape):
     bank = _mixed_bank(rng, n)
     w = jnp.asarray(rng.uniform(0.1, 3.0, size=(n,)), jnp.float32)
     seg = jnp.asarray(rng.integers(0, m, size=(n,)), jnp.int32)
-    mesh = mesh_lib.make_bank_mesh(*shape)
-    got = hfl.weighted_aggregate(bank, w, seg, m, mesh=mesh)
+    ctx = hfl.AggContext.for_mesh(mesh_lib.make_bank_mesh(*shape))
+    got = hfl.weighted_aggregate(bank, w, seg, m, ctx=ctx)
     want = ref.weighted_aggregate_ref(bank, w, seg, m)
     _assert_tree_close(got, want)
     # and identical (to f32 reduction order) with the single-chip path
@@ -140,8 +140,8 @@ def test_uneven_edge_to_shard_split():
     seg = jnp.asarray([0] * 9 + [1] * 3 + [2] * 4, jnp.int32)
     bank = {"w": jnp.asarray(rng.normal(size=(n, 130)), jnp.float32)}
     w = jnp.asarray(rng.uniform(0.5, 2.0, size=(n,)), jnp.float32)
-    mesh = mesh_lib.make_bank_mesh(4)
-    got = hfl.weighted_aggregate(bank, w, seg, m, mesh=mesh)["w"]
+    ctx = hfl.AggContext.for_mesh(mesh_lib.make_bank_mesh(4))
+    got = hfl.weighted_aggregate(bank, w, seg, m, ctx=ctx)["w"]
     want = ref.weighted_aggregate_ref(
         {"w": bank["w"]}, w, seg, m)["w"]
     np.testing.assert_allclose(np.asarray(got), np.asarray(want),
@@ -161,8 +161,8 @@ def test_sharded_bf16_bank(shape):
     assert flatbank.bank_spec(bank).dtype == jnp.dtype(jnp.bfloat16)
     w = jnp.asarray(rng.uniform(0.5, 2.0, size=(n,)), jnp.float32)
     seg = jnp.asarray(rng.integers(0, m, size=(n,)), jnp.int32)
-    mesh = mesh_lib.make_bank_mesh(*shape)
-    got = hfl.weighted_aggregate(bank, w, seg, m, mesh=mesh)
+    ctx = hfl.AggContext.for_mesh(mesh_lib.make_bank_mesh(*shape))
+    got = hfl.weighted_aggregate(bank, w, seg, m, ctx=ctx)
     want = ref.weighted_aggregate_ref(bank, w, seg, m)
     _assert_tree_close(got, want, bf16_tol=4e-2)
 
@@ -192,12 +192,16 @@ def test_cloud_aggregate_sharded_and_fallback():
     edge_models = {"w": jnp.asarray(rng.normal(size=(m, 33)), jnp.float32)}
     esz = jnp.asarray(rng.uniform(1, 3, size=(m,)), jnp.float32)
     want = hfl.cloud_aggregate(edge_models, esz)
-    got = hfl.cloud_aggregate(edge_models, esz,
-                              mesh=mesh_lib.make_bank_mesh(2))   # 4 % 2 == 0
-    _assert_tree_close(got, want)
-    got_fb = hfl.cloud_aggregate(edge_models, esz,
-                                 mesh=mesh_lib.make_bank_mesh(3))  # fallback
-    _assert_tree_close(got_fb, want)
+    # replicated plain launch under a mesh: bitwise for any E, even when
+    # E does not divide the shard count
+    got = hfl.cloud_aggregate(
+        edge_models, esz,
+        ctx=hfl.AggContext.for_mesh(mesh_lib.make_bank_mesh(2)))
+    _assert_tree_close(got, want, f32_tol=0.0)
+    got_fb = hfl.cloud_aggregate(
+        edge_models, esz,
+        ctx=hfl.AggContext.for_mesh(mesh_lib.make_bank_mesh(3)))
+    _assert_tree_close(got_fb, want, f32_tol=0.0)
 
 
 # ---------------------------------------------------------------------------
@@ -227,9 +231,9 @@ def test_staleness_flush_sharded_matches_oracle(shape):
 
     single, _ = fill(StalenessBuffer(k, decay="poly",
                                      decay_a=0.5)).flush(version=10)
-    mesh = mesh_lib.make_bank_mesh(*shape)
+    ctx = hfl.AggContext.for_mesh(mesh_lib.make_bank_mesh(*shape))
     sharded, info = fill(StalenessBuffer(
-        k, decay="poly", decay_a=0.5, mesh=mesh)).flush(version=10)
+        k, decay="poly", decay_a=0.5, ctx=ctx)).flush(version=10)
     assert info["staleness"] == tau.tolist()
     want = ref_mod.staleness_aggregate_ref(np.stack(vecs), w, tau,
                                            decay="poly", a=0.5)
@@ -264,9 +268,9 @@ def test_degraded_flush_sharded_matches_oracle(shape):
 
     single, _ = fill(StalenessBuffer(k + 1, decay="poly")).flush(
         version=10, anchor=anchor, anchor_weight=m_w)
-    mesh = mesh_lib.make_bank_mesh(*shape)
+    ctx = hfl.AggContext.for_mesh(mesh_lib.make_bank_mesh(*shape))
     sharded, info = fill(StalenessBuffer(k + 1, decay="poly",
-                                         mesh=mesh)).flush(
+                                         ctx=ctx)).flush(
         version=10, anchor=anchor, anchor_weight=m_w)
     assert 0.0 < info["coverage"] < 1.0
     want = ref_mod.coverage_aggregate_ref(np.stack(vecs), w, tau,
@@ -279,14 +283,15 @@ def test_degraded_flush_sharded_matches_oracle(shape):
 
 
 @needs_mesh
-def test_staleness_flush_indivisible_k_falls_back():
-    """K not divisible by the mesh -> the flush silently uses the
-    single-chip launch (the buffer is small; correctness first)."""
+def test_staleness_flush_indivisible_k_is_bitwise():
+    """The flush is a replicated plain launch under a mesh
+    (``AggContext.segment_agg_small``), so K not dividing the shard
+    count is fine and the result is *bitwise* the single-chip launch."""
     from repro.runtime import StalenessBuffer
     rng = np.random.default_rng(12)
     k, p = 5, 140
-    buf = StalenessBuffer(k, decay="none",
-                          mesh=mesh_lib.make_bank_mesh(4))   # 5 % 4 != 0
+    ctx = hfl.AggContext.for_mesh(mesh_lib.make_bank_mesh(4))  # 5 % 4 != 0
+    buf = StalenessBuffer(k, decay="none", ctx=ctx)
     vecs = [jnp.asarray(rng.normal(size=(p,)), jnp.float32)
             for _ in range(k)]
     for j in range(k):
@@ -331,8 +336,8 @@ def test_cloud_round_sharded_matches_single_chip(shape):
     single = hfl.make_cloud_round(loss, 0.05, 4, m, 3, 2)
     b0, gm0, em0 = single(jax.tree.map(jnp.copy, bank), x, y, sizes,
                           seg, g1, g2, key)
-    mesh = mesh_lib.make_bank_mesh(*shape)
-    sharded = hfl.make_cloud_round(loss, 0.05, 4, m, 3, 2, mesh=mesh)
+    ctx = hfl.AggContext.for_mesh(mesh_lib.make_bank_mesh(*shape))
+    sharded = hfl.make_cloud_round(loss, 0.05, 4, m, 3, 2, ctx=ctx)
     b1, gm1, em1 = sharded(jax.tree.map(jnp.copy, bank), x, y, sizes,
                            seg, g1, g2, key)
     _assert_tree_close((b1, gm1, em1), (b0, gm0, em0), f32_tol=1e-4)
@@ -348,8 +353,9 @@ def test_fedavg_round_sharded_matches_single_chip():
     single = hfl.make_fedavg_round(loss, 0.05, 4, max_g1=2)
     b0, g0 = single(jax.tree.map(jnp.copy, bank), x, y, sizes, part,
                     jnp.asarray(2), key)
-    sharded = hfl.make_fedavg_round(loss, 0.05, 4, max_g1=2,
-                                    mesh=mesh_lib.make_bank_mesh(4))
+    sharded = hfl.make_fedavg_round(
+        loss, 0.05, 4, max_g1=2,
+        ctx=hfl.AggContext.for_mesh(mesh_lib.make_bank_mesh(4)))
     b1, g1_ = sharded(jax.tree.map(jnp.copy, bank), x, y, sizes, part,
                       jnp.asarray(2), key)
     _assert_tree_close((b1, g1_), (b0, g0), f32_tol=1e-4)
@@ -371,7 +377,8 @@ def test_sharded_round_never_materializes_full_bank():
     for leaf in jax.tree.leaves(bank_p):
         assert {s.data.shape[0] for s in leaf.addressable_shards} \
             == {n // k}
-    round_ = hfl.make_cloud_round(loss, 0.05, 4, m, 2, 2, mesh=mesh)
+    round_ = hfl.make_cloud_round(loss, 0.05, 4, m, 2, 2,
+                                  ctx=hfl.AggContext.for_mesh(mesh))
     out_bank, glob, edges = round_(
         bank_p, x, y, sizes, seg, jnp.full((m,), 2), jnp.full((m,), 2),
         jax.random.PRNGKey(2))
@@ -390,11 +397,220 @@ def test_sharded_round_never_materializes_full_bank():
 def test_round_rejects_indivisible_rows():
     rng = np.random.default_rng(10)
     bank, x, y, sizes, loss = _round_fixtures(rng, 10)   # 10 % 4 != 0
-    round_ = hfl.make_cloud_round(loss, 0.05, 4, 2, 2, 2,
-                                  mesh=mesh_lib.make_bank_mesh(4))
+    round_ = hfl.make_cloud_round(
+        loss, 0.05, 4, 2, 2, 2,
+        ctx=hfl.AggContext.for_mesh(mesh_lib.make_bank_mesh(4)))
     with pytest.raises(ValueError):
         round_(bank, x, y, sizes, jnp.zeros((10,), jnp.int32),
                jnp.ones((2,)), jnp.ones((2,)), jax.random.PRNGKey(0))
+
+
+# ---------------------------------------------------------------------------
+# AggContext: construction, validation, deprecation shims
+# ---------------------------------------------------------------------------
+
+def test_agg_context_construction_and_validation():
+    ctx = hfl.AggContext.single_chip()
+    assert not ctx.sharded and ctx.mesh is None and ctx.n_shards == 1
+    assert ctx.donate_argnums(0) == (0,)
+    assert hfl.AggContext.single_chip(donate=False).donate_argnums(0) \
+        == ()
+    with pytest.raises(ValueError):
+        hfl.AggContext.for_mesh(None)
+    with pytest.raises(TypeError):
+        hfl.AggContext.for_mesh("not a mesh")
+    ctx1 = hfl.AggContext.for_mesh(mesh_lib.make_bank_mesh(1))
+    assert ctx1.sharded and ctx1.axes == ("edge", "fl")
+    assert ctx1.n_shards == 1
+    assert ctx1.check_rows(8) == 8          # rows per shard
+
+
+def test_mesh_kwarg_deprecation_shims():
+    """The one-cycle ``mesh=`` spelling warns and routes to the same
+    sharded path; passing both spellings is an error; a non-AggContext
+    ``ctx`` is a TypeError."""
+    rng = np.random.default_rng(21)
+    bank = {"w": jnp.asarray(rng.normal(size=(4, 9)), jnp.float32)}
+    w = jnp.ones((4,), jnp.float32)
+    seg = jnp.zeros((4,), jnp.int32)
+    m1 = mesh_lib.make_bank_mesh(1)
+    with pytest.warns(DeprecationWarning):
+        got = hfl.weighted_aggregate(bank, w, seg, 1,
+                                     mesh=m1)  # allow-mesh-kwarg
+    want = hfl.weighted_aggregate(bank, w, seg, 1)
+    _assert_tree_close(got, want, f32_tol=0.0)
+    with pytest.raises(ValueError):
+        hfl.weighted_aggregate(bank, w, seg, 1,
+                               ctx=hfl.AggContext.for_mesh(m1),
+                               mesh=m1)  # allow-mesh-kwarg
+    with pytest.raises(TypeError):
+        hfl.weighted_aggregate(bank, w, seg, 1, ctx="nope")
+
+
+# ---------------------------------------------------------------------------
+# sharded async edge round: bitwise parity + placement + churn resync
+# ---------------------------------------------------------------------------
+
+@needs_mesh
+@pytest.mark.parametrize("shape", MESH_SHAPES)
+def test_edge_round_sharded_bitwise(shape):
+    """Tentpole acceptance: the async per-edge round compiled under a
+    sharded AggContext is **bitwise** the single-chip round when the
+    edge->row assignment is shard-aligned (contiguous blocks — the
+    ShardedBankSpec layout contract). Zero-masked rows and zero psum
+    partials are reduction-neutral, so the owner shard reproduces the
+    single-chip FMA accumulation chain exactly."""
+    rng = np.random.default_rng(20)
+    n, m = 16, 4
+    bank, x, y, sizes, loss = _round_fixtures(rng, n)
+    seg = jnp.asarray(np.repeat(np.arange(m), n // m), jnp.int32)
+    p = flatbank.bank_spec(bank).width
+    gvec = jnp.asarray(rng.normal(size=(p,)), jnp.float32)
+    key = jax.random.PRNGKey(3)
+    single = hfl.make_edge_round(loss, 0.05, 4, m, 3, 3)
+    ctx = hfl.AggContext.for_mesh(mesh_lib.make_bank_mesh(*shape))
+    sharded = hfl.make_edge_round(loss, 0.05, 4, m, 3, 3, ctx=ctx)
+    for j in range(m):
+        b0, e0 = single(jax.tree.map(jnp.copy, bank), x, y, sizes, seg,
+                        jnp.int32(j), jnp.int32(2), jnp.int32(2),
+                        gvec, key)
+        b1, e1 = sharded(jax.tree.map(jnp.copy, bank), x, y, sizes, seg,
+                         jnp.int32(j), jnp.int32(2), jnp.int32(2),
+                         gvec, key)
+        np.testing.assert_array_equal(np.asarray(e1), np.asarray(e0))
+        for l0, l1 in zip(jax.tree.leaves(b0), jax.tree.leaves(b1)):
+            np.testing.assert_array_equal(np.asarray(l1, np.float32),
+                                          np.asarray(l0, np.float32))
+
+
+@needs_mesh
+def test_edge_round_sharded_placement_and_donation():
+    """No-full-bank contract for the async round: input bank placed
+    row-sharded and donated, output bank leaves stay as N/k-row shards,
+    the returned edge update is replicated."""
+    rng = np.random.default_rng(22)
+    n, m, k = 16, 4, 4
+    bank, x, y, sizes, loss = _round_fixtures(rng, n)
+    seg = jnp.asarray(np.repeat(np.arange(m), n // m), jnp.int32)
+    p = flatbank.bank_spec(bank).width
+    gvec = jnp.zeros((p,), jnp.float32)
+    mesh = mesh_lib.make_bank_mesh(k)
+    ctx = hfl.AggContext.for_mesh(mesh)
+    bank_p = ctx.place_bank(bank)
+    round_ = hfl.make_edge_round(loss, 0.05, 4, m, 2, 2, ctx=ctx)
+    out_bank, evec = round_(bank_p, x, y, sizes, seg, jnp.int32(1),
+                            jnp.int32(2), jnp.int32(2), gvec,
+                            jax.random.PRNGKey(4))
+    for leaf in jax.tree.leaves(out_bank):
+        assert {s.data.shape[0] for s in leaf.addressable_shards} \
+            == {n // k}
+    assert {s.data.shape for s in evec.addressable_shards} \
+        == {evec.shape}                                    # replicated
+    assert all(l.is_deleted() for l in jax.tree.leaves(bank_p))
+
+
+@needs_mesh
+@pytest.mark.parametrize("shape", [(2, 1), (4, 1), (2, 2)])
+def test_masked_resync_sharded_churn_join_bitwise(shape):
+    """Churn-join on the sharded bank: ``masked_resync`` under a
+    sharded AggContext re-seeds only the joining edge's (shard-local)
+    rows, bitwise the single-chip result, and the bank stays
+    row-sharded."""
+    rng = np.random.default_rng(23)
+    n, m, p = 16, 4, 37
+    seg = np.repeat(np.arange(m), n // m)
+    bank_mat = jnp.asarray(rng.normal(size=(n, p)), jnp.float32)
+    edge_mat = jnp.asarray(rng.normal(size=(m, p)), jnp.float32)
+    alive = np.zeros(m, bool)
+    alive[1] = True                              # edge 1 rejoins
+    want = hfl.masked_resync(edge_mat, bank_mat, seg, alive)
+    ctx = hfl.AggContext.for_mesh(mesh_lib.make_bank_mesh(*shape))
+    got = hfl.masked_resync(edge_mat, ctx.place_rows(bank_mat), seg,
+                            alive, ctx=ctx)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    k = ctx.n_shards
+    assert {s.data.shape[0] for s in got.addressable_shards} == {n // k}
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: async env trajectories bitwise across mesh configs
+# ---------------------------------------------------------------------------
+
+TRAJ_CFG = dict(task="mnist", mode="real", n_devices=8, n_edges=4,
+                n_local=32, batch_size=16, threshold_time=300.0,
+                gamma_max=2, seed=0)
+
+
+def _run_async_traj(ctx, steps, async_cfg, faults):
+    """Run ``steps`` upload events on an AsyncHFLEnv with contiguous
+    (shard-aligned) edge assignment; returns the acc trajectory, the
+    flat global vector, the flat bank, and the degraded-flush count."""
+    from repro.runtime import AsyncConfig
+    from repro.sim import AsyncHFLEnv, EnvConfig
+    cfg = EnvConfig(**dict(TRAJ_CFG, agg=ctx))
+    env = AsyncHFLEnv(cfg, async_cfg, faults=faults)
+    env.set_topology(np.repeat(np.arange(4), 2))
+    env.reset()
+    traj, degr = [], 0
+    for _ in range(steps):
+        _, _, done, info = env.step(np.array([2.0, 2.0]))
+        traj.append(info["acc"])
+        if info["flushed"] and env._flush_info.get("degraded"):
+            degr += 1
+        if done:
+            break
+    return (traj, np.asarray(env._global_vec),
+            np.asarray(env._spec.flatten(env.bank), np.float32),
+            degr, env)
+
+
+@needs_mesh
+@pytest.mark.parametrize("shape", [(1, 1), (2, 1), (4, 1)])
+def test_async_env_trajectory_sharded_bitwise(shape):
+    """ISSUE acceptance: an all-zeros-FaultSpec async run on a sharded
+    AggContext reproduces the single-chip trajectory **bitwise** —
+    accuracies, global vector, and bank — with the bank row-sharded
+    throughout (no device holds all rows)."""
+    from repro.runtime import AsyncConfig, FaultSpec
+    acfg = lambda: AsyncConfig(buffer_k=2, decay="none")
+    spec = lambda: FaultSpec(seed=3)             # all-zeros: no faults
+    t0, g0, b0, _, _ = _run_async_traj(None, 4, acfg(), spec())
+    ctx = hfl.AggContext.for_mesh(mesh_lib.make_bank_mesh(*shape))
+    t1, g1_, b1, _, env = _run_async_traj(ctx, 4, acfg(), spec())
+    assert t1 == t0
+    np.testing.assert_array_equal(g1_, g0)
+    np.testing.assert_array_equal(b1, b0)
+    k = ctx.n_shards
+    n = TRAJ_CFG["n_devices"]
+    for leaf in jax.tree.leaves(env.bank):
+        assert {s.data.shape[0] for s in leaf.addressable_shards} \
+            == {n // k}
+
+
+@needs_mesh
+@pytest.mark.parametrize("shape", [(2, 1), (4, 1)])
+def test_async_env_trajectory_sharded_faults_bitwise(shape):
+    """ISSUE acceptance, degraded-flush run: dropout + deadline flushes
+    + leave/join churn — the injector's RNG draws are identical across
+    mesh configs, so the full faulty trajectory (including at least one
+    coverage-corrected flush and the churn-join resync) stays bitwise
+    the single-chip run."""
+    from repro.runtime import AsyncConfig, ChurnEvent, FaultSpec
+    acfg = lambda: AsyncConfig(buffer_k=3, flush_deadline=20.0)
+    spec = lambda: FaultSpec(drop_prob=0.6,
+                             churn=(ChurnEvent(30.0, 1, "leave"),
+                                    ChurnEvent(60.0, 1, "join")),
+                             seed=5)
+    t0, g0, b0, d0, _ = _run_async_traj(None, 6, acfg(), spec())
+    assert d0 >= 1                       # the scenario actually degrades
+    ctx = hfl.AggContext.for_mesh(mesh_lib.make_bank_mesh(*shape))
+    t1, g1_, b1, d1, env = _run_async_traj(ctx, 6, acfg(), spec())
+    assert t1 == t0 and d1 == d0
+    np.testing.assert_array_equal(g1_, g0)
+    np.testing.assert_array_equal(b1, b0)
+    for leaf in jax.tree.leaves(env.bank):
+        assert {s.data.shape[0] for s in leaf.addressable_shards} \
+            == {TRAJ_CFG["n_devices"] // ctx.n_shards}
 
 
 # ---------------------------------------------------------------------------
