@@ -28,6 +28,7 @@ BENCHES = [
     "fig12_pca",
     "fig13_async",
     "fig_faults",
+    "fig_telemetry",
     "table2_enhancement",
     "kernels_bench",
     "roofline",

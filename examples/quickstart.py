@@ -10,7 +10,11 @@ evaluation vs a Vanilla-HFL baseline -> the event-driven async runtime
 chaos FaultSpec (dropout + transient failures + an outage + leave/join
 churn) and prints the survivor-coverage statistics of the degraded
 flushes — it owns the buffer size (K=2), so combining it with an
-explicit ``--async-k`` is an error.
+explicit ``--async-k`` is an error. ``--trace`` runs a short faulty
+async episode with telemetry enabled and writes the Chrome-trace
+timeline to ``reports/trace_demo.json`` (open it at
+``chrome://tracing`` or https://ui.perfetto.dev), printing per-edge
+span counts.
 
 Every scheme run dispatches through ``sync.run_scheme`` (the
 ``SchemeSpec`` registry) — the same entry point ``benchmarks/`` uses.
@@ -36,7 +40,13 @@ def main():
                          "FaultSpec and print survivor-coverage stats "
                          "(owns the buffer size — mutually exclusive "
                          "with --async-k)")
+    ap.add_argument("--trace", action="store_true",
+                    help="run a short faulty async episode with "
+                         "telemetry on and write reports/trace_demo.json"
+                         " (Chrome-trace format)")
     args = ap.parse_args()
+    if args.trace:
+        return trace_demo()
     if args.faults and args.async_k is not None:
         ap.error("--faults and --async-k are mutually exclusive: the "
                  "faults demo owns its buffer size (K=2 so degraded "
@@ -108,6 +118,38 @@ def main():
         else:
             print("degraded flushes: 0 (K always met within the "
                   "deadline)")
+
+
+def trace_demo():
+    """`--trace`: one short faulty async episode with telemetry on;
+    exports the simulated timeline as Chrome-trace JSON."""
+    import os
+    cfg = EnvConfig(task="mnist", mode="analytic", n_devices=10,
+                    n_edges=3, n_local=96, threshold_time=400.0,
+                    gamma_max=3, seed=0, telemetry=True)
+    spec = FaultSpec.random(seed=42, n_edges=cfg.n_edges,
+                            horizon=cfg.threshold_time)
+    env = AsyncHFLEnv(cfg, AsyncConfig(buffer_k=2, decay="poly",
+                                       decay_a=0.5, flush_deadline=30.0),
+                      faults=spec)
+    env.reset()
+    done, events = False, 0
+    while not done:
+        _, _, done, info = env.step(np.array([2.0, 2.0]))
+        events += 1
+    os.makedirs("reports", exist_ok=True)
+    out = "reports/trace_demo.json"
+    env.telemetry.export_chrome(out, task=cfg.task, mode=cfg.mode,
+                                seed=cfg.seed, events=events)
+    tm = info.get("telemetry", {}).get("counters", {})
+    print(f"traced {events} upload events, "
+          f"{len(env.telemetry.recorder)} trace events -> {out}")
+    print(f"flushes={tm.get('flushes', 0)} "
+          f"retries={tm.get('retries', 0)} "
+          f"dropped={tm.get('uploads_dropped', 0)}")
+    print("per-lane span counts (open the JSON in chrome://tracing):")
+    for lane, n in sorted(env.telemetry.span_counts().items()):
+        print(f"  {lane:8s} {n}")
 
 
 if __name__ == "__main__":

@@ -21,6 +21,12 @@
 #                                degraded flushes (tests/test_faults.py)
 #                                and the crash-recovery kill/resume
 #                                harness (tests/test_recovery.py)
+#   scripts/ci.sh test-telemetry observability slice: trace recorder /
+#                                metrics registry units, the bitwise
+#                                no-perturbation guarantee (single-chip
+#                                + 2-shard), Chrome-trace schema, and
+#                                kernel-timing hooks
+#                                (tests/test_telemetry.py)
 #   scripts/ci.sh bench          kernels_bench + regression gate vs the
 #                                committed BENCH_kernels.json (>20%
 #                                kernel/oracle regression fails;
@@ -36,7 +42,7 @@ export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
 cmd="${1:-test}"
 # consume the subcommand word only if one was actually given
 case "${1:-}" in
-  lint|test|test-sharded|test-runtime|test-faults|bench) shift ;;
+  lint|test|test-sharded|test-runtime|test-faults|test-telemetry|bench) shift ;;
 esac
 case "$cmd" in
   lint)
@@ -56,6 +62,9 @@ case "$cmd" in
   test-faults)
     python -m pytest -x -q tests/test_faults.py \
       tests/test_recovery.py "$@"
+    ;;
+  test-telemetry)
+    python -m pytest -x -q tests/test_telemetry.py "$@"
     ;;
   bench)
     python scripts/bench_gate.py

@@ -150,6 +150,11 @@ def save_runtime(env, path: str) -> None:
                        "edge": int(ev.edge), "kind": ev.kind,
                        "payload": _enc_map(ev.payload, arrays, f"q/{i}")}
                       for i, ev in enumerate(env.queue.events())]},
+        # telemetry rides in the meta JSON (trace events + open spans +
+        # metric state are plain Python), so a resumed traced run emits
+        # the same merged trace as an uninterrupted one
+        "telemetry": (env.telemetry.state()
+                      if env.telemetry.enabled else None),
         "buffer": {"arrivals": int(env.buffer._arrivals),
                    "slots": [
                        {"edge": int(s.edge), "weight": float(s.weight),
@@ -228,6 +233,9 @@ def load_runtime(env, path: str) -> None:
     # --- RNGs (numpy generator, JAX key chain, fault injector) ---------
     env.rng.bit_generator.state = meta["rng"]
     env._injector.set_state(meta["injector"])
+    # --- telemetry (when the snapshot carries it and the env records) --
+    if meta.get("telemetry") is not None and env.telemetry.enabled:
+        env.telemetry.set_state(meta["telemetry"])
     env._key = jnp.asarray(data["key"])
     env._abase = jnp.asarray(data["abase"])
     # --- topology / hardware -------------------------------------------

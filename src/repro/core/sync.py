@@ -322,11 +322,18 @@ def _learned(env, agent):
 # ---------------------------------------------------------------------------
 
 def _history(env):
-    return {"acc": list(env.acc_hist), "energy": list(env.energy_hist),
-            "time": list(env.time_hist), "final_acc": env.acc,
-            "total_energy": float(np.sum(env.energy_hist)),
-            "avg_energy": float(np.mean(env.energy_hist)),
-            "rounds": len(env.acc_hist)}
+    out = {"acc": list(env.acc_hist), "energy": list(env.energy_hist),
+           "time": list(env.time_hist), "final_acc": env.acc,
+           "total_energy": float(np.sum(env.energy_hist)),
+           "avg_energy": float(np.mean(env.energy_hist)),
+           "rounds": len(env.acc_hist)}
+    # async envs built with telemetry carry the episode's metric
+    # snapshot (staleness/coverage/retry statistics) into the scheme
+    # result so benchmarks can report runtime behavior, not just curves
+    tm = getattr(env, "telemetry", None)
+    if tm is not None and tm.enabled:
+        out["telemetry"] = tm.metrics.snapshot()
+    return out
 
 
 SCHEMES: dict[str, SchemeSpec] = {s.name: s for s in [

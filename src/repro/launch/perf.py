@@ -1,6 +1,3 @@
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
-
 """§Perf hillclimb driver (EXPERIMENTS.md).
 
 Runs the three chosen (arch × shape) pairs through hypothesis-driven
@@ -10,6 +7,13 @@ before/after table.
 
     PYTHONPATH=src python -m repro.launch.perf [--pair rwkv|grok|qwen3]
 """
+
+import os
+
+# the dry-run topologies need many host devices; respect flags the
+# caller (or conftest.py) already exported — never clobber them
+os.environ.setdefault(
+    "XLA_FLAGS", "--xla_force_host_platform_device_count=512")
 
 import argparse
 import json

@@ -92,7 +92,8 @@ class StalenessBuffer:
     """
 
     def __init__(self, capacity: int, decay: str = "poly",
-                 decay_a: float = 0.5, ctx=None, mesh=None):
+                 decay_a: float = 0.5, ctx=None, mesh=None,
+                 telemetry=None, clock=None):
         from repro.core import hfl                 # local: avoid cycle
         if capacity < 1:
             raise ValueError(f"buffer capacity must be >= 1, got {capacity}")
@@ -102,6 +103,14 @@ class StalenessBuffer:
         self.ctx = hfl._resolve_ctx(ctx, mesh, "StalenessBuffer")
         self._slots: list[_Slot] = []
         self._arrivals = 0
+        # pure observers (bitwise no-perturbation): the telemetry facade
+        # records residency spans; the clock only supplies timestamps.
+        self.telemetry = telemetry
+        self.clock = clock
+
+    @property
+    def _now(self) -> float:
+        return float(self.clock.now) if self.clock is not None else 0.0
 
     @property
     def mesh(self):
@@ -124,6 +133,10 @@ class StalenessBuffer:
                                  weight=float(weight), version=int(version),
                                  arrival=self._arrivals, meta=meta))
         self._arrivals += 1
+        if self.telemetry is not None:
+            self.telemetry.buffer_push(int(edge), self._now, int(version),
+                                       self._arrivals - 1,
+                                       len(self._slots), self.capacity)
 
     def flush(self, version: int, max_staleness: int = 0, anchor=None,
               anchor_weight: float = 0.0):
@@ -156,13 +169,21 @@ class StalenessBuffer:
         if max_staleness > 0:
             keep = tau <= max_staleness
             dropped = [s.edge for s, k in zip(slots, keep) if not k]
+            stale = [(s.arrival, s.edge, int(t))
+                     for s, t, k in zip(slots, tau, keep) if not k]
             slots = [s for s, k in zip(slots, keep) if k]
             tau = tau[keep]
         else:
             dropped = []
+            stale = []
         info = {"edges": [s.edge for s in slots],
                 "staleness": tau.tolist(), "dropped": dropped,
                 "meta": [s.meta for s in slots]}
+        if self.telemetry is not None:
+            self.telemetry.buffer_flushed(
+                self._now,
+                [(s.arrival, s.edge, int(t)) for s, t in zip(slots, tau)],
+                stale)
         if not slots:
             return None, info
         scale = staleness_scale(tau, self.decay, self.decay_a)

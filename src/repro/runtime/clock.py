@@ -38,12 +38,19 @@ class EventQueue:
 
     ``pop`` advances ``now`` to the popped event's time; scheduling into
     the past raises — simulated time never runs backwards.
+
+    ``observer`` (optional, default None) is notified *after* each
+    schedule/pop with the event and the new queue depth. Observers are
+    pure sinks — telemetry (``repro.telemetry.Telemetry``) uses this to
+    record queue-depth counters without touching ordering or state; the
+    disabled path is a single ``is None`` check.
     """
 
     def __init__(self):
         self._heap: list = []
         self._seq = 0
         self.now = 0.0
+        self.observer = None
 
     def __len__(self) -> int:
         return len(self._heap)
@@ -57,6 +64,8 @@ class EventQueue:
                    kind=kind, payload=payload)
         self._seq += 1
         heapq.heappush(self._heap, ev)
+        if self.observer is not None:
+            self.observer.on_schedule(ev, len(self._heap), self.now)
         return ev
 
     def schedule_at(self, time: float, edge: int, kind: str = "upload",
@@ -75,6 +84,8 @@ class EventQueue:
             raise IndexError("pop from an empty event queue")
         ev = heapq.heappop(self._heap)
         self.now = ev.time
+        if self.observer is not None:
+            self.observer.on_pop(ev, len(self._heap))
         return ev
 
     # ------------------------------------------------------------------

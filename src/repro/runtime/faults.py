@@ -155,9 +155,11 @@ class FaultInjector:
     """
 
     def __init__(self, spec: Optional[FaultSpec], n_edges: int,
-                 seed_offset: int = 0):
+                 seed_offset: int = 0, telemetry=None):
         self.spec = spec or FaultSpec()
         self.n_edges = int(n_edges)
+        # pure observer: counts each fate decision, never drawn from
+        self.telemetry = telemetry
         # seed_offset folds the episode index in, so PPO training sees a
         # varied fault trace per episode while staying reproducible
         self.rng = np.random.default_rng(self.spec.seed + int(seed_offset))
@@ -199,6 +201,14 @@ class FaultInjector:
         spec = self.spec
         if not spec.enabled:
             return OK
+        fate = self._decide(edge, attempt, now, first_try)
+        if self.telemetry is not None:
+            self.telemetry.fault_fate(edge, fate)
+        return fate
+
+    def _decide(self, edge: int, attempt: int, now: float,
+                first_try: float) -> str:
+        spec = self.spec
         if self.in_outage[edge]:
             return self._retry_or_drop(edge, attempt, now, first_try)
         if attempt == 0 and self._drop_p[edge] > 0 \

@@ -68,6 +68,11 @@ class EnvConfig:
     # bare mesh, wrapped into a context at env construction).
     agg: Optional[object] = None
     mesh: Optional[object] = None
+    # observability (repro.telemetry; DESIGN.md §7): True builds the
+    # async env with an enabled Telemetry facade (trace recorder +
+    # metrics registry). Pure observation — enabled vs disabled is
+    # bitwise-identical (tests/test_telemetry.py).
+    telemetry: bool = False
     # analytic-mode calibration
     a_max: float = 0.80
     a_rate: float = 0.016            # per-local-epoch progress rate
@@ -401,12 +406,21 @@ class AsyncHFLEnv(HFLEnv):
     ``load_runtime`` snapshot and restore the full runtime state.
     """
 
-    def __init__(self, cfg: EnvConfig, async_cfg=None, faults=None):
+    def __init__(self, cfg: EnvConfig, async_cfg=None, faults=None,
+                 telemetry=None):
         from repro.runtime import AsyncConfig
+        from repro.telemetry import Telemetry
         super().__init__(cfg)
         self.acfg = async_cfg or AsyncConfig()
         self.buffer_k = self.acfg.buffer_k or cfg.n_edges
         self.faults = faults
+        # explicit facade wins; else EnvConfig.telemetry toggles one on.
+        # A disabled facade keeps every hook a no-op and the queue
+        # observer None — the telemetry-off code path is unchanged.
+        if telemetry is None:
+            telemetry = (Telemetry() if cfg.telemetry
+                         else Telemetry.disabled())
+        self.telemetry = telemetry
         if cfg.mode == "real":
             # with a sharded context the per-edge round compiles under
             # GSPMD with the bank row-sharded, the masked edge
@@ -433,8 +447,10 @@ class AsyncHFLEnv(HFLEnv):
         # per-episode fault state: its dedicated generator folds the
         # episode index in so PPO episodes see varied fault traces while
         # a fresh env stays bitwise-reproducible run to run
+        tm = self.telemetry if self.telemetry.enabled else None
         self._injector = FaultInjector(self.faults, m,
-                                       seed_offset=self.episode)
+                                       seed_offset=self.episode,
+                                       telemetry=tm)
         self._incarnation = np.zeros(m, np.int64)
         self._last_action = [(2, 2)] * m
         super().reset()                 # sync warmup round + PCA fit
@@ -452,9 +468,14 @@ class AsyncHFLEnv(HFLEnv):
             self._edge_w = self._edge_sizes.copy()
         self.queue = EventQueue()
         self.queue.now = cfg.threshold_time - self.t_re  # after warmup
+        # fresh trace per episode; the observer hook is None when
+        # telemetry is disabled, so pop/schedule stay untouched
+        self.telemetry.begin_episode(self.episode, self.queue.now, m)
+        self.queue.observer = tm
         self.buffer = StalenessBuffer(
             self.buffer_k, decay=self.acfg.decay,
-            decay_a=self.acfg.decay_a, ctx=self.agg_ctx)
+            decay_a=self.acfg.decay_a, ctx=self.agg_ctx,
+            telemetry=tm, clock=self.queue)
         self.n_flushes = 0
         self._edge_version = np.zeros(m, np.int64)
         self._last_time = self.queue.now
@@ -492,6 +513,8 @@ class AsyncHFLEnv(HFLEnv):
                             incarnation=int(self._incarnation[edge]))
         self._edge_version[edge] = self.version
         self._in_flight[edge] = True
+        self.telemetry.round_launched(edge, self.queue.now, cost,
+                                      g1, g2, self.version)
 
     # ------------------------------------------------------------------
     # fault-event handlers (repro.runtime.faults)
@@ -507,6 +530,7 @@ class AsyncHFLEnv(HFLEnv):
         fi.retry_pending[j] = 0
         self._incarnation[j] += 1
         self._in_flight[j] = False
+        self.telemetry.churn(j, self.queue.now, "leave")
 
     def _handle_join(self, j: int) -> None:
         """Mobility churn: edge ``j`` (re)joins. Real mode resyncs only
@@ -519,6 +543,7 @@ class AsyncHFLEnv(HFLEnv):
             return
         fi.alive[j] = True
         self._incarnation[j] += 1
+        self.telemetry.churn(j, self.queue.now, "join")
         if self.cfg.mode == "real":
             self._edge_mat = self._edge_mat.at[j].set(
                 self._global_vec.astype(self._edge_mat.dtype))
@@ -559,8 +584,10 @@ class AsyncHFLEnv(HFLEnv):
             kind = ev.kind
             if kind == "outage_start":
                 fi.in_outage[ev.edge] = True
+                self.telemetry.outage(ev.edge, ev.time, started=True)
             elif kind == "outage_end":
                 fi.in_outage[ev.edge] = False
+                self.telemetry.outage(ev.edge, ev.time, started=False)
             elif kind == "leave":
                 self._handle_leave(ev.edge)
             elif kind == "join":
@@ -569,6 +596,7 @@ class AsyncHFLEnv(HFLEnv):
                 pay = ev.payload
                 if pay.get("incarnation", 0) \
                         != int(self._incarnation[ev.edge]):
+                    self.telemetry.ghost_upload(ev.edge, ev.time)
                     continue    # ghost: the edge departed mid-round
                 attempt = pay.get("attempt", 0)
                 first = pay.get("first_try", ev.time)
@@ -577,9 +605,11 @@ class AsyncHFLEnv(HFLEnv):
                     fi.retry_pending[ev.edge] = attempt + 1
                     # capped exponential backoff + a fresh comm-model
                     # upload draw prices the retry
+                    delay = fi.retry_delay(self.comm, ev.edge, attempt)
+                    self.telemetry.retry_scheduled(ev.edge, ev.time,
+                                                   attempt, delay)
                     self.queue.schedule(
-                        fi.retry_delay(self.comm, ev.edge, attempt),
-                        ev.edge, kind="upload",
+                        delay, ev.edge, kind="upload",
                         **{**pay, "attempt": attempt + 1,
                            "first_try": first})
                     self._maybe_deadline_flush()
@@ -590,6 +620,12 @@ class AsyncHFLEnv(HFLEnv):
         j, pay, cost = ev.edge, ev.payload, ev.payload["cost"]
         lost = fate == "drop"
         self._in_flight[j] = False
+        if lost:
+            self.telemetry.upload_dropped(j, ev.time, attempt)
+        else:
+            self.telemetry.upload_landed(
+                j, ev.time, pay["version"],
+                self.version - pay["version"], attempt)
         if lost:
             # the round's compute (and energy) is spent, but the update
             # never reaches the cloud: nothing is buffered and in real
@@ -644,6 +680,7 @@ class AsyncHFLEnv(HFLEnv):
             missing = max(self.buffer_k - len(self.buffer), 0)
             anchor = self._global_vec
             m_w = float(missing * np.mean(self._edge_w))
+        flush_version = self.version
         glob, info = self.buffer.flush(self.version,
                                        self.acfg.max_staleness,
                                        anchor=anchor, anchor_weight=m_w)
@@ -668,6 +705,8 @@ class AsyncHFLEnv(HFLEnv):
         # reset the deadline clock even for a vacuous flush (every slot
         # staleness-dropped) — otherwise it would re-trigger every event
         self._last_flush_time = self.queue.now
+        self.telemetry.flush_event(self.queue.now, flush_version, info,
+                                   applied, degraded)
 
     def _analytic_flush(self, info) -> float:
         """Analytic-mode accuracy update per flush — the synchronous
@@ -722,11 +761,14 @@ class AsyncHFLEnv(HFLEnv):
             # the queue drained: every edge departed (mobility churn)
             # and nothing can ever arrive again — terminal state
             self._deciding = None
+            self.telemetry.fleet_down(self.queue.now)
             info = {"acc": self.acc, "energy": 0.0, "t_use": 0.0,
                     "t_re": self.t_re, "edge": -1, "g1": 0, "g2": 0,
                     "flushed": False, "version": self.version,
                     "staleness": self._staleness.copy(),
                     "fleet_down": True, "dropped": False}
+            if self.telemetry.enabled:
+                info["telemetry"] = self.telemetry.metrics.brief()
             return self._state(), 0.0, True, info
         self._deciding = ev.edge
         cost = ev.payload["cost"]
@@ -740,6 +782,8 @@ class AsyncHFLEnv(HFLEnv):
                 "staleness": self._staleness.copy(),
                 "dropped": self._last_upload_lost,
                 "retries": int(ev.payload.get("attempt", 0))}
+        if self.telemetry.enabled:
+            info["telemetry"] = self.telemetry.metrics.brief()
         return self._state(), float(r), bool(done), info
 
     # ------------------------------------------------------------------

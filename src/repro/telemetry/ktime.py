@@ -1,0 +1,81 @@
+"""Opt-in wall-clock timing of the Pallas kernel launches.
+
+``repro.kernels.ops`` routes its public ``segment_agg`` /
+``segment_broadcast`` entry points through :func:`call_timed`. With no
+registry installed (the default) that is a single module-global
+``None`` check — a zero-cost no-op. Inside :func:`kernel_timing` each
+*dispatched* launch is synced (``block_until_ready``) and its
+wall-clock microseconds land in the active
+:class:`repro.telemetry.metrics.MetricsRegistry` as
+``kernel/<name>_us`` observations — the same registry shape
+``benchmarks/kernels_bench`` rows come from, so the
+``segment_agg_timed_64x500k`` bench row gates the hook's overhead
+under the standard bench-gate policy.
+
+Bitwise contract: timing only adds a host-side sync around the
+unchanged jit call — values are untouched. Launches *traced inside an
+outer jit* (the compiled round bodies) are skipped, not timed: timing
+a tracer is meaningless and the sync would fail, so the hook
+explicitly checks for abstract values and falls through.
+"""
+from __future__ import annotations
+
+import contextlib
+import time
+
+import jax
+
+_REGISTRY = None       # the active MetricsRegistry, or None (disabled)
+
+
+def active_registry():
+    return _REGISTRY
+
+
+def enable(registry) -> None:
+    """Install ``registry`` as the sink for kernel launch timings."""
+    global _REGISTRY
+    _REGISTRY = registry
+
+
+def disable() -> None:
+    global _REGISTRY
+    _REGISTRY = None
+
+
+@contextlib.contextmanager
+def kernel_timing(registry):
+    """``with kernel_timing(reg): ...`` — time every Pallas launch
+    dispatched in the block into ``reg`` (restores the previous sink,
+    so contexts nest)."""
+    global _REGISTRY
+    prev = _REGISTRY
+    _REGISTRY = registry
+    try:
+        yield registry
+    finally:
+        _REGISTRY = prev
+
+
+def _traced(args, kwargs) -> bool:
+    for leaf in jax.tree_util.tree_leaves((args, kwargs)):
+        if isinstance(leaf, jax.core.Tracer):
+            return True
+    return False
+
+
+def call_timed(name: str, fn, *args, **kwargs):
+    """Dispatch ``fn(*args, **kwargs)``; when a registry is active (and
+    the call is a real dispatch, not a trace), sync the result and
+    record wall-clock µs as ``kernel/<name>_us``."""
+    reg = _REGISTRY
+    if reg is None or _traced(args, kwargs):
+        return fn(*args, **kwargs)
+    t0 = time.perf_counter()
+    out = fn(*args, **kwargs)
+    for leaf in jax.tree_util.tree_leaves(out):
+        if hasattr(leaf, "block_until_ready"):
+            leaf.block_until_ready()
+    reg.observe(f"kernel/{name}_us", (time.perf_counter() - t0) * 1e6)
+    reg.inc(f"kernel/{name}_calls")
+    return out

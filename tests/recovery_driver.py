@@ -14,6 +14,11 @@ Modes (argv[1]):
 ``full`` and ``resume`` must print identical JSON (same final global
 model hash, bank hash, accuracy, histories) — the recovery contract of
 ``repro.checkpoint.store.save_runtime`` (tests/test_recovery.py).
+
+An optional ``trace`` flag (argv[4]) runs the episode with telemetry
+enabled: the final JSON then also carries the merged event-trace hash
+and metric counters, so the traced kill/resume test can assert a
+resumed run emits the **same merged trace** as an uninterrupted one.
 """
 import hashlib
 import json
@@ -37,8 +42,9 @@ SPEC = FaultSpec(drop_prob=0.25, transient_prob=0.2, seed=11)
 ACTION = np.array([2.0, 2.0])
 
 
-def _make_env():
-    return AsyncHFLEnv(EnvConfig(**CFG), ACFG, faults=SPEC)
+def _make_env(trace: bool = False):
+    return AsyncHFLEnv(EnvConfig(**CFG, telemetry=trace), ACFG,
+                       faults=SPEC)
 
 
 def _finish(env, steps_done: int):
@@ -48,18 +54,30 @@ def _finish(env, steps_done: int):
         steps_done += 1
     gvec = np.asarray(env._global_vec)
     bank = np.asarray(env._spec.flatten(env.bank))
-    print(json.dumps({
+    out = {
         "acc": env.acc, "version": env.version, "steps": steps_done,
         "gvec": hashlib.sha256(gvec.tobytes()).hexdigest(),
         "bank": hashlib.sha256(bank.tobytes()).hexdigest(),
         "acc_hist_tail": env.acc_hist[-5:],
         "drops": env._injector.n_dropped.tolist(),
-        "retries": env._injector.n_retries.tolist()}))
+        "retries": env._injector.n_retries.tolist()}
+    if env.telemetry.enabled:
+        # the merged trace of the whole episode: byte-hash of the
+        # canonical event dump + the metric counters — a resumed run
+        # must reproduce both exactly (the seamless-trace contract)
+        events = json.dumps(env.telemetry.recorder.events,
+                            sort_keys=True)
+        out["trace_events"] = len(env.telemetry.recorder)
+        out["trace_sha"] = hashlib.sha256(events.encode()).hexdigest()
+        out["counters"] = dict(sorted(
+            env.telemetry.metrics.counters.items()))
+    print(json.dumps(out))
 
 
 def main():
     mode, ckpt, save_step = sys.argv[1], sys.argv[2], int(sys.argv[3])
-    env = _make_env()
+    trace = len(sys.argv) > 4 and sys.argv[4] == "trace"
+    env = _make_env(trace)
     if mode == "resume":
         store.load_runtime(env, ckpt)
         _finish(env, save_step)

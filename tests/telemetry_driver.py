@@ -1,0 +1,72 @@
+"""Child-process driver for the 2-shard telemetry parity test
+(not a pytest file; tests/test_telemetry.py runs it through
+tests/_subproc.py with a forced host device count).
+
+``argv[1]`` = number of bank shards. The driver runs the same
+real-mode faulty episode twice on that mesh — telemetry **on**, then
+telemetry **off** — and prints one JSON line reporting whether the two
+trajectories (per-step rewards/accuracies/edges/flush flags), the
+final global vector, and the final bank are **bitwise identical**,
+plus the enabled run's trace size. This is the sharded half of the
+no-perturbation acceptance criterion (ISSUE 8): collectors observe
+the event stream without perturbing it, on single-chip *and* sharded
+meshes.
+"""
+import hashlib
+import json
+import sys
+
+import numpy as np
+
+from repro.core import hfl
+from repro.launch import mesh as mesh_lib
+from repro.runtime import AsyncConfig, FaultSpec
+from repro.sim.env import AsyncHFLEnv, EnvConfig
+
+CFG = dict(task="mnist", mode="real", n_devices=8, n_edges=4,
+           n_local=16, batch_size=16, threshold_time=120.0,
+           gamma_max=2, seed=0)
+ACFG = AsyncConfig(buffer_k=2, flush_deadline=60.0)
+SPEC = FaultSpec(drop_prob=0.25, transient_prob=0.2, seed=7)
+ACTION = np.array([2.0, 2.0])
+
+
+def _run(shards: int, telemetry: bool):
+    cfg = dict(CFG)
+    if shards > 1:
+        cfg["agg"] = hfl.AggContext.for_mesh(
+            mesh_lib.make_bank_mesh(shards))
+    env = AsyncHFLEnv(EnvConfig(**cfg, telemetry=telemetry), ACFG,
+                      faults=SPEC)
+    # contiguous edge->device assignment, aligned with the row shards
+    env.set_topology(np.repeat(np.arange(CFG["n_edges"]),
+                               CFG["n_devices"] // CFG["n_edges"]))
+    env.reset()
+    traj, done = [], False
+    while not done:
+        _, r, done, info = env.step(ACTION)
+        traj.append((float(r), float(info["acc"]), info["edge"],
+                     info["flushed"]))
+    gvec = np.asarray(env._global_vec)
+    bank = np.asarray(env._spec.flatten(env.bank), np.float32)
+    return traj, gvec, bank, env
+
+
+def main():
+    shards = int(sys.argv[1])
+    t_on, g_on, b_on, env = _run(shards, telemetry=True)
+    t_off, g_off, b_off, _ = _run(shards, telemetry=False)
+    print(json.dumps({
+        "shards": shards,
+        "steps": len(t_on),
+        "bitwise_identical": bool(
+            t_on == t_off
+            and g_on.tobytes() == g_off.tobytes()
+            and b_on.tobytes() == b_off.tobytes()),
+        "trace_events": len(env.telemetry.recorder),
+        "flushes": int(env.telemetry.metrics.counters.get("flushes", 0)),
+        "gvec_sha": hashlib.sha256(g_on.tobytes()).hexdigest()}))
+
+
+if __name__ == "__main__":
+    main()

@@ -92,3 +92,29 @@ def test_kill_resume_converges_to_uninterrupted_model(tmp_path):
                                   timeout=1800)
     got = json.loads(resumed.stdout.strip().splitlines()[-1])
     assert got == want, (got, want)
+
+
+def test_traced_kill_resume_emits_same_merged_trace(tmp_path):
+    """Telemetry checkpoint round-trip (ISSUE 8): SIGKILL a *traced*
+    real-mode run mid-episode and resume it — the resumed process must
+    emit the same merged event trace (byte-hash) and metric counters as
+    an uninterrupted traced run, on top of the same final model."""
+    driver = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                          "recovery_driver.py")
+    ck_full = str(tmp_path / "full")
+    ck_crash = str(tmp_path / "crash")
+    save_step = 3
+    full = _subproc.run_script(driver, "full", ck_full, save_step,
+                               "trace", timeout=1800)
+    want = json.loads(full.stdout.strip().splitlines()[-1])
+    assert want["trace_events"] > 0 and "trace_sha" in want
+
+    crashed = _subproc.run_script(driver, "crash", ck_crash, save_step,
+                                  "trace", timeout=1800, check=False)
+    assert crashed.returncode == -signal.SIGKILL
+    assert os.path.exists(ck_crash + ".npz")
+
+    resumed = _subproc.run_script(driver, "resume", ck_crash, save_step,
+                                  "trace", timeout=1800)
+    got = json.loads(resumed.stdout.strip().splitlines()[-1])
+    assert got == want, (got, want)
