@@ -2,11 +2,17 @@
 and kernel tables for the TPU framework path).
 
     PYTHONPATH=src python -m benchmarks.run [--full] [--only NAME]
+                                            [--ledger]
 
 Prints ``name,metric,value`` CSV rows (collated per module) and writes
-reports/bench_results.json. Modules may declare ``ARTIFACT = "<path>"``
-to additionally persist their rows standalone (kernels_bench writes
-``BENCH_kernels.json`` — the hot-path perf trajectory).
+reports/bench_results.json — **merging** into the existing file, so a
+``--only`` run refreshes that module's entry (including error entries
+for failed modules) without clobbering the rest. Modules may declare
+``ARTIFACT = "<path>"`` to additionally persist their rows standalone
+(kernels_bench writes ``BENCH_kernels.json`` — the hot-path perf
+trajectory). ``--ledger`` installs the process-default run ledger
+(``reports/ledger``; DESIGN.md §8) so every ``run_scheme`` a module
+dispatches leaves a durable, diffable record stream.
 """
 from __future__ import annotations
 
@@ -40,7 +46,13 @@ def main() -> None:
     ap.add_argument("--full", action="store_true",
                     help="paper-scale profiles (hours)")
     ap.add_argument("--only", default=None)
+    ap.add_argument("--ledger", action="store_true",
+                    help="record every run_scheme call to the run "
+                         "ledger (reports/ledger)")
     args = ap.parse_args()
+    if args.ledger:
+        from repro.telemetry import ledger as ledger_mod
+        ledger_mod.enable(os.path.join("reports", "ledger"))
     quick = not args.full
     results = {}
     names = [args.only] if args.only else BENCHES
@@ -70,8 +82,19 @@ def main() -> None:
                 print(f"{name}/{tag},{k},{v}", flush=True)
         print(f"{name},elapsed_s,{time.time()-t0:.1f}", flush=True)
     os.makedirs("reports", exist_ok=True)
-    with open("reports/bench_results.json", "w") as f:
-        json.dump(results, f, indent=1)
+    # merge into the existing results file: a --only run updates its
+    # module's entry (error entries included) and leaves the rest
+    out_path = os.path.join("reports", "bench_results.json")
+    merged = {}
+    if os.path.exists(out_path):
+        try:
+            with open(out_path) as f:
+                merged = json.load(f)
+        except (json.JSONDecodeError, OSError):
+            merged = {}      # corrupt artifact: rebuild from this run
+    merged.update(results)
+    with open(out_path, "w") as f:
+        json.dump(merged, f, indent=1)
 
 
 if __name__ == "__main__":

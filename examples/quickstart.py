@@ -14,7 +14,10 @@ explicit ``--async-k`` is an error. ``--trace`` runs a short faulty
 async episode with telemetry enabled and writes the Chrome-trace
 timeline to ``reports/trace_demo.json`` (open it at
 ``chrome://tracing`` or https://ui.perfetto.dev), printing per-edge
-span counts.
+span counts. ``--ledger`` runs a small two-scheme sweep recorded to
+the persistent run ledger (``reports/ledger``; DESIGN.md §8), then
+lists the streams and renders ``reports/ledger.html`` — the
+"Experiment ledger" walkthrough in README.md.
 
 Every scheme run dispatches through ``sync.run_scheme`` (the
 ``SchemeSpec`` registry) — the same entry point ``benchmarks/`` uses.
@@ -44,9 +47,15 @@ def main():
                     help="run a short faulty async episode with "
                          "telemetry on and write reports/trace_demo.json"
                          " (Chrome-trace format)")
+    ap.add_argument("--ledger", action="store_true",
+                    help="record a small scheme sweep to the run "
+                         "ledger (reports/ledger) and render the HTML "
+                         "report")
     args = ap.parse_args()
     if args.trace:
         return trace_demo()
+    if args.ledger:
+        return ledger_demo()
     if args.faults and args.async_k is not None:
         ap.error("--faults and --async-k are mutually exclusive: the "
                  "faults demo owns its buffer size (K=2 so degraded "
@@ -150,6 +159,35 @@ def trace_demo():
     print("per-lane span counts (open the JSON in chrome://tracing):")
     for lane, n in sorted(env.telemetry.span_counts().items()):
         print(f"  {lane:8s} {n}")
+
+
+def ledger_demo():
+    """`--ledger`: the README "Experiment ledger" walkthrough — two
+    analytic schemes (one sync, one async + health monitors) recorded
+    to the persistent run ledger, then listed and rendered."""
+    from repro.telemetry import ledger as ledger_mod
+    ledger_mod.enable("reports/ledger")
+    cfg = EnvConfig(task="mnist", mode="analytic", n_devices=20,
+                    n_edges=4, threshold_time=400.0, gamma_max=3,
+                    seed=0, telemetry=True, health=True)
+    print("== recording two schemes to reports/ledger ==")
+    h = sync.run_scheme("vanilla-hfl", HFLEnv(cfg), g1=2, g2=2)
+    print(f"vanilla-hfl: acc={h['final_acc']:.3f} "
+          f"run={h['ledger_run_id']}")
+    aenv = AsyncHFLEnv(cfg, AsyncConfig(buffer_k=2, decay="poly",
+                                        decay_a=0.5))
+    h2 = sync.run_scheme("async-fedavg", aenv, g1=2, g2=2)
+    print(f"async-fedavg: acc={h2['final_acc']:.3f} "
+          f"run={h2['ledger_run_id']} "
+          f"health_events={len(aenv.health.events)}")
+    print("\n== recorded streams ==")
+    for r in ledger_mod.list_runs("reports/ledger"):
+        print(f"  {r['run_id']}  {r['scheme']:<13} "
+              f"episodes={r['episodes']} acc={r['final_acc']:.3f}")
+    out = ledger_mod.render_report("reports/ledger")
+    print(f"\nreport -> {out}")
+    print("inspect / diff runs with: python scripts/ledger.py "
+          "{list,diff,report}")
 
 
 if __name__ == "__main__":

@@ -27,10 +27,19 @@
 #                                + 2-shard), Chrome-trace schema, and
 #                                kernel-timing hooks
 #                                (tests/test_telemetry.py)
+#   scripts/ci.sh test-ledger    run-ledger slice: deterministic run
+#                                ids, ledger/health bitwise
+#                                no-perturbation, uniform _history
+#                                schema across SCHEMES, gate + CLI
+#                                round-trips (tests/test_ledger.py)
 #   scripts/ci.sh bench          kernels_bench + regression gate vs the
 #                                committed BENCH_kernels.json (>20%
 #                                kernel/oracle regression fails;
 #                                passing runs append new rows)
+#   scripts/ci.sh learning-gate  fixed-seed learning-metric gate vs the
+#                                committed BENCH_learning.json
+#                                (scripts/learning_gate.py; >5% final-
+#                                acc / to-target regression fails)
 #
 # Backward compatible: no subcommand (or pytest-style args such as
 # `scripts/ci.sh -k flat`) runs the tier-1 suite.
@@ -42,7 +51,7 @@ export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
 cmd="${1:-test}"
 # consume the subcommand word only if one was actually given
 case "${1:-}" in
-  lint|test|test-sharded|test-runtime|test-faults|test-telemetry|bench) shift ;;
+  lint|test|test-sharded|test-runtime|test-faults|test-telemetry|test-ledger|bench|learning-gate) shift ;;
 esac
 case "$cmd" in
   lint)
@@ -66,8 +75,14 @@ case "$cmd" in
   test-telemetry)
     python -m pytest -x -q tests/test_telemetry.py "$@"
     ;;
+  test-ledger)
+    python -m pytest -x -q tests/test_ledger.py "$@"
+    ;;
   bench)
     python scripts/bench_gate.py
+    ;;
+  learning-gate)
+    python scripts/learning_gate.py
     ;;
   *)
     # legacy behavior: everything is pytest args for the tier-1 suite

@@ -1,0 +1,183 @@
+#!/usr/bin/env python
+"""Learning-metric regression gate (scripts/ci.sh learning-gate).
+
+Runs a fixed-seed, reduced-scale analytic ``run_scheme`` sweep —
+synchronous baselines plus the buffered async runtime — and compares
+each scheme's **learning metrics** against the committed
+``BENCH_learning.json`` baseline:
+
+* ``final_acc`` — end-of-episode accuracy (regresses when it falls
+  more than ``LEARNING_GATE_TOL`` *relative* below baseline);
+* ``time_to_target_s`` / ``energy_to_target_mAh`` — simulated seconds
+  / mAh until accuracy first reaches the target (paper Fig. 8's
+  reading); regresses when it grows more than the tolerance, or when
+  the baseline reached the target and the new run never does.
+
+Same policy as ``scripts/bench_gate.py``: tolerance knob
+(``LEARNING_GATE_TOL``, default 0.05), append-only baseline — schemes
+new to this commit are appended on pass, existing rows keep their
+committed numbers (no silent re-baselining; moving one is the
+deliberate act ``--rebaseline``) — and a non-zero exit leaves the
+baseline untouched. Unlike the kernel gate there is no best-of-N
+retry: the analytic sweep is a deterministic function of the seed
+(two consecutive runs emit byte-identical ledger rows —
+tests/test_ledger.py), so any delta is a real code change.
+
+The sweep records to the run ledger (``reports/ledger``) by default so
+every CI run leaves a comparable stream (``--no-ledger`` opts out).
+``LEARNING_GATE_AR_SCALE`` scales the analytic learning rate — the
+regression-injection hook the gate's own tests use to prove it fails
+when learning degrades.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+BASELINE = os.path.join(REPO, "BENCH_learning.json")
+TOL = float(os.environ.get("LEARNING_GATE_TOL", "0.05"))
+TARGET_ACC = 0.45
+
+# reduced-scale fixed-seed sweep config (analytic mode: deterministic
+# per seed, seconds per scheme). health+telemetry on: the gate doubles
+# as a CI smoke of the observability layer's no-perturbation contract.
+SWEEP_CFG = dict(task="mnist", mode="analytic", n_devices=20, n_edges=4,
+                 threshold_time=600.0, gamma_max=8, seed=0,
+                 telemetry=True, health=True)
+SCHEMES = ("vanilla-hfl", "var-freq-a", "async-fedavg")
+
+
+def _to_target(history: dict, target: float):
+    """(time_to_target_s, energy_to_target_mAh) — cumulative sim time /
+    energy when accuracy first reaches ``target``; None if never."""
+    t = e = 0.0
+    for acc, dt, de in zip(history["acc"], history["time"],
+                           history["energy"]):
+        t += dt
+        e += de
+        if acc >= target:
+            return t, e
+    return None, None
+
+
+def run_sweep(ledger=False) -> list:
+    sys.path.insert(0, os.path.join(REPO, "src"))
+    from repro.core import sync
+    from repro.runtime import AsyncConfig
+    from repro.sim.env import AsyncHFLEnv, EnvConfig, HFLEnv
+
+    cfg = dict(SWEEP_CFG)
+    cfg["a_rate"] = (EnvConfig.a_rate
+                     * float(os.environ.get("LEARNING_GATE_AR_SCALE",
+                                            "1.0")))
+    rows = []
+    for scheme in SCHEMES:
+        if sync.SCHEMES[scheme].needs_async:
+            env = AsyncHFLEnv(EnvConfig(**cfg),
+                              async_cfg=AsyncConfig(buffer_k=2))
+        else:
+            env = HFLEnv(EnvConfig(**cfg))
+        h = sync.run_scheme(scheme, env, ledger=ledger)
+        t_t, e_t = _to_target(h, TARGET_ACC)
+        rows.append({"scheme": scheme, "task": cfg["task"],
+                     "mode": cfg["mode"], "seed": cfg["seed"],
+                     "target_acc": TARGET_ACC,
+                     "final_acc": round(h["final_acc"], 6),
+                     "time_to_target_s": (None if t_t is None
+                                          else round(t_t, 3)),
+                     "energy_to_target_mAh": (None if e_t is None
+                                              else round(e_t, 3)),
+                     "rounds": h["rounds"]})
+    return rows
+
+
+def compare(rows: list, baseline: list, tol: float) -> list:
+    """Regression messages vs the committed baseline (keyed by
+    scheme). final_acc gates downward, *-to-target gate upward; a
+    newly-unreachable target is always a regression."""
+    new = {r["scheme"]: r for r in rows}
+    regressions = []
+    for base in baseline:
+        row = new.get(base["scheme"])
+        if row is None:
+            continue
+        acc_b, acc_n = base["final_acc"], row["final_acc"]
+        if acc_n < acc_b * (1.0 - tol):
+            regressions.append(
+                f"{base['scheme']}: final_acc {acc_n:.4f} vs baseline "
+                f"{acc_b:.4f} (>{tol:.0%} drop)")
+        for metric in ("time_to_target_s", "energy_to_target_mAh"):
+            m_b, m_n = base[metric], row[metric]
+            if m_b is None:
+                continue            # baseline never reached the target
+            if m_n is None:
+                regressions.append(
+                    f"{base['scheme']}: {metric} unreachable "
+                    f"(target acc {base['target_acc']}) vs baseline "
+                    f"{m_b:.1f}")
+            elif m_n > m_b * (1.0 + tol):
+                regressions.append(
+                    f"{base['scheme']}: {metric} {m_n:.1f} vs baseline "
+                    f"{m_b:.1f} (>{tol:.0%} regression)")
+    return regressions
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="fixed-seed learning-metric regression gate")
+    ap.add_argument("--no-ledger", action="store_true",
+                    help="do not record the sweep to reports/ledger")
+    ap.add_argument("--rebaseline", action="store_true",
+                    help="overwrite BENCH_learning.json with this "
+                         "sweep (the deliberate re-baselining act; "
+                         "commit the result)")
+    args = ap.parse_args(argv)
+    ledger = False if args.no_ledger \
+        else os.path.join(REPO, "reports", "ledger")
+    print(f"learning gate: schemes={','.join(SCHEMES)}, tol={TOL:.0%}, "
+          f"seed={SWEEP_CFG['seed']}")
+    rows = run_sweep(ledger=ledger)
+    for r in rows:
+        t = ("-" if r["time_to_target_s"] is None
+             else f"{r['time_to_target_s']:.1f}s")
+        e = ("-" if r["energy_to_target_mAh"] is None
+             else f"{r['energy_to_target_mAh']:.1f}mAh")
+        print(f"  {r['scheme']}: final_acc={r['final_acc']:.4f} "
+              f"to-target(acc>={r['target_acc']}): {t} / {e} "
+              f"rounds={r['rounds']}")
+    if args.rebaseline:
+        with open(BASELINE, "w") as f:
+            json.dump(rows, f, indent=1)
+        print(f"re-baselined {BASELINE} ({len(rows)} row(s)); "
+              f"commit it deliberately")
+        return 0
+    if not os.path.exists(BASELINE):
+        print(f"LEARNING GATE FAILED: no baseline at {BASELINE} "
+              f"(create one with --rebaseline and commit it)")
+        return 1
+    with open(BASELINE) as f:
+        baseline = json.load(f)
+    regressions = compare(rows, baseline, TOL)
+    if regressions:
+        print("LEARNING GATE FAILED:")
+        for r in regressions:
+            print(f"  {r}")
+        return 1
+    # append-only: known schemes keep their committed numbers
+    base_schemes = {r["scheme"] for r in baseline}
+    merged = list(baseline) + [r for r in rows
+                               if r["scheme"] not in base_schemes]
+    appended = len(merged) - len(baseline)
+    if appended:
+        with open(BASELINE, "w") as f:
+            json.dump(merged, f, indent=1)
+    print(f"learning gate passed; {appended} new row(s) appended to "
+          f"{BASELINE} ({len(merged)} total)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,117 @@
+#!/usr/bin/env python
+"""CLI over the run-ledger streams (``reports/ledger/*.jsonl``).
+
+    python scripts/ledger.py list
+    python scripts/ledger.py diff <run_a> <run_b>
+    python scripts/ledger.py report [--out reports/ledger.html]
+
+``list`` summarizes every recorded run; ``diff`` prints the config
+delta + metric delta between two runs (ids may be unambiguous
+prefixes); ``report`` renders the static HTML acc-vs-sim-time-vs-
+energy report (the paper's Fig. 8 view).
+
+Stdlib-only: the analysis lives in ``src/repro/telemetry/ledger.py``,
+loaded standalone here so listing runs never imports jax (the
+``repro.telemetry`` package pulls the kernel-timing module, which
+does). DESIGN.md §8 documents the record schema.
+"""
+from __future__ import annotations
+
+import argparse
+import importlib.util
+import os
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def load_ledger_module():
+    path = os.path.join(REPO, "src", "repro", "telemetry", "ledger.py")
+    spec = importlib.util.spec_from_file_location("_repro_ledger", path)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def _resolve(lm, root: str, ref: str) -> dict:
+    """A run by id (or unambiguous id prefix)."""
+    matches = [r for r in lm.list_runs(root)
+               if r["run_id"].startswith(ref)]
+    if not matches:
+        sys.exit(f"no run matching {ref!r} under {root}")
+    if len(matches) > 1:
+        sys.exit(f"{ref!r} is ambiguous: "
+                 + ", ".join(r["run_id"] for r in matches))
+    return matches[0]["_run"]
+
+
+def cmd_list(lm, args) -> int:
+    runs = lm.list_runs(args.root)
+    if not runs:
+        print(f"no runs under {args.root}")
+        return 0
+    hdr = (f"{'run id':<13} {'scheme':<13} {'mode':<9} {'seed':>4} "
+           f"{'eps':>4} {'final acc':>9} {'energy':>9} "
+           f"{'sim time':>9} {'health':>8}")
+    print(hdr)
+    print("-" * len(hdr))
+    for r in runs:
+        acc = "-" if r["final_acc"] is None else f"{r['final_acc']:.3f}"
+        en = ("-" if r["total_energy"] is None
+              else f"{r['total_energy']:.1f}")
+        t = "-" if r["sim_time_s"] is None else f"{r['sim_time_s']:.0f}"
+        health = ("critical" if r["critical"]
+                  else str(r["health_events"]))
+        print(f"{r['run_id']:<13} {r['scheme']:<13} {r['mode']:<9} "
+              f"{r['seed']:>4} {r['episodes']:>4} {acc:>9} {en:>9} "
+              f"{t:>9} {health:>8}")
+    return 0
+
+
+def cmd_diff(lm, args) -> int:
+    a = _resolve(lm, args.root, args.a)
+    b = _resolve(lm, args.root, args.b)
+    d = lm.diff_runs(a, b)
+    print(f"diff {d['a']} -> {d['b']}")
+    print("config delta:")
+    if not d["config"]:
+        print("  (identical)")
+    for k, (va, vb) in sorted(d["config"].items()):
+        print(f"  {k}: {va!r} -> {vb!r}")
+    print("metric delta (last episode):")
+    for m, row in d["metrics"].items():
+        delta = ("" if row["delta"] is None
+                 else f"  ({row['delta']:+.4g})")
+        print(f"  {m}: {row['a']!r} -> {row['b']!r}{delta}")
+    return 0
+
+
+def cmd_report(lm, args) -> int:
+    out = lm.render_report(args.root, args.out)
+    n = len(lm.list_runs(args.root))
+    print(f"wrote {out} ({n} run(s))")
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="inspect run-ledger streams (DESIGN.md §8)")
+    ap.add_argument("--root", default=os.path.join(REPO, "reports",
+                                                   "ledger"),
+                    help="ledger directory (default: reports/ledger)")
+    sub = ap.add_subparsers(dest="cmd", required=True)
+    sub.add_parser("list", help="summarize every recorded run")
+    d = sub.add_parser("diff", help="config + metric delta of two runs")
+    d.add_argument("a", help="run id (or unambiguous prefix)")
+    d.add_argument("b", help="run id (or unambiguous prefix)")
+    r = sub.add_parser("report", help="render the static HTML report")
+    r.add_argument("--out", default=os.path.join(REPO, "reports",
+                                                 "ledger.html"))
+    args = ap.parse_args(argv)
+    lm = load_ledger_module()
+    return {"list": cmd_list, "diff": cmd_diff,
+            "report": cmd_report}[args.cmd](lm, args)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -155,6 +155,12 @@ def save_runtime(env, path: str) -> None:
         # the same merged trace as an uninterrupted one
         "telemetry": (env.telemetry.state()
                       if env.telemetry.enabled else None),
+        # health monitor + ledger identity: a resumed run keeps its
+        # divergence/stall arming state and appends to the *same*
+        # ledger stream instead of forking a new run id
+        "health": (env.health.state()
+                   if getattr(env, "health", None) is not None else None),
+        "ledger_run_id": getattr(env, "_ledger_run_id", None),
         "buffer": {"arrivals": int(env.buffer._arrivals),
                    "slots": [
                        {"edge": int(s.edge), "weight": float(s.weight),
@@ -236,6 +242,12 @@ def load_runtime(env, path: str) -> None:
     # --- telemetry (when the snapshot carries it and the env records) --
     if meta.get("telemetry") is not None and env.telemetry.enabled:
         env.telemetry.set_state(meta["telemetry"])
+    # --- health monitor + ledger identity ------------------------------
+    if meta.get("health") is not None \
+            and getattr(env, "health", None) is not None:
+        env.health.set_state(meta["health"])
+    if meta.get("ledger_run_id"):
+        env._ledger_run_id = meta["ledger_run_id"]
     env._key = jnp.asarray(data["key"])
     env._abase = jnp.asarray(data["abase"])
     # --- topology / hardware -------------------------------------------

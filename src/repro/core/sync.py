@@ -93,16 +93,33 @@ class SchemeSpec:
         return self.runner(env, **params)
 
 
-def run_scheme(name: str, env, *, agent=None, **overrides):
+def run_scheme(name: str, env, *, agent=None, ledger=None, **overrides):
     """The one dispatch point ``benchmarks/*`` and ``examples/``
     use: look the scheme up in :data:`SCHEMES` and run it with
-    ``overrides`` merged over the registry defaults."""
+    ``overrides`` merged over the registry defaults.
+
+    ``ledger``: where to record the run (``repro.telemetry.ledger``,
+    DESIGN.md §8). ``None`` falls through to the process default
+    (installed by ``ledger.enable()`` — none by default), ``False``
+    forces recording off, ``True``/a path/a :class:`RunLedger` records
+    there. Recording happens *after* the episode from host-side
+    history — ledger-on vs ledger-off trajectories are bitwise
+    identical (tests/test_ledger.py). The recorded run id is returned
+    in the history dict as ``"ledger_run_id"``."""
     try:
         spec = SCHEMES[name]
     except KeyError:
         raise KeyError(f"unknown scheme {name!r}; available: "
                        f"{sorted(SCHEMES)}") from None
-    return spec(env, agent=agent, **overrides)
+    from repro.telemetry import ledger as ledger_mod
+    lg = ledger_mod.resolve(ledger)
+    h = spec(env, agent=agent, **overrides)
+    if lg is not None:
+        params = spec.params
+        params.update(overrides)
+        h["ledger_run_id"] = lg.record_run(
+            scheme=name, env=env, history=h, params=params)
+    return h
 
 
 def _given(**kw) -> dict:

@@ -36,6 +36,7 @@ from repro.core import hfl, pca, profiling, reward as reward_mod, state as state
 from repro.data import federated, synthetic
 from repro.models import model as model_mod
 from repro.sim import hardware
+from repro.telemetry.health import HealthConfig, HealthMonitor
 
 
 @dataclasses.dataclass
@@ -73,6 +74,12 @@ class EnvConfig:
     # metrics registry). Pure observation — enabled vs disabled is
     # bitwise-identical (tests/test_telemetry.py).
     telemetry: bool = False
+    # per-run health monitors (repro.telemetry.health; DESIGN.md §8):
+    # True attaches a HealthMonitor with the default HealthConfig —
+    # NaN/Inf guard, divergence + flush-stall detection — surfacing
+    # events in info["health"] and the run ledger. Observation only:
+    # health-on vs -off is bitwise-identical (tests/test_ledger.py).
+    health: bool = False
     # analytic-mode calibration
     a_max: float = 0.80
     a_rate: float = 0.016            # per-local-epoch progress rate
@@ -97,9 +104,17 @@ class EnvConfig:
 class HFLEnv:
     """Gym-ish: reset() -> state; step(a) -> (state, reward, done, info)."""
 
-    def __init__(self, cfg: EnvConfig):
+    def __init__(self, cfg: EnvConfig, health=None):
         cfg = cfg.fixup()
         self.cfg = cfg
+        # per-run health monitors: an explicit HealthMonitor (or a bare
+        # HealthConfig) wins; else cfg.health toggles the defaults on.
+        # None = disabled — the health-off code path is unchanged.
+        if health is None and cfg.health:
+            health = HealthMonitor()
+        elif isinstance(health, HealthConfig):
+            health = HealthMonitor(health)
+        self.health = health
         # one AggContext carries the mesh / placement / donation policy
         # for every aggregation this env runs; cfg.mesh is the
         # deprecated spelling and resolves here once (with the same
@@ -181,6 +196,8 @@ class HFLEnv:
         self.acc_hist = []
         self.time_hist = []
         self.episode += 1
+        if self.health is not None:
+            self.health.reset()
         key = jax.random.PRNGKey(cfg.seed + 1000)  # same w(0) each episode
         if cfg.mode == "real":
             self.bank = hfl.init_bank(self._init_fn, key, cfg.n_devices)
@@ -323,7 +340,33 @@ class HFLEnv:
         self.time_hist.append(t_use)
         info = {"acc": self.acc, "energy": e_tot, "t_use": t_use,
                 "t_re": self.t_re, "g1": g1, "g2": g2}
+        self._observe_health(info)
         return self._state(), float(r), bool(done), info
+
+    def _observe_health(self, info: dict, *, flushed: bool = True)\
+            -> None:
+        """Feed the (optional) health monitor and surface any new
+        events in ``info["health"]``. Host-side reads only — never a
+        state mutation or RNG draw — so health-on vs health-off
+        trajectories stay bitwise-identical (tests/test_ledger.py).
+        May raise :class:`HealthAbort` when the opt-in abort policy is
+        armed and a critical event fires."""
+        if self.health is None:
+            return
+        bank_finite = None
+        if (flushed and self.cfg.mode == "real"
+                and self.health.cfg.check_bank):
+            vec = getattr(self, "_global_vec", None)
+            if vec is not None:          # async real: flat global vector
+                bank_finite = bool(np.isfinite(np.asarray(vec)).all())
+            else:
+                bank_finite = all(
+                    bool(jnp.isfinite(leaf).all())
+                    for leaf in jax.tree.leaves(self.global_model))
+        info["health"] = [e.to_dict() for e in self.health.observe(
+            step=self.k,
+            sim_time=self.cfg.threshold_time - self.t_re,
+            acc=self.acc, flushed=flushed, bank_finite=bank_finite)]
 
     # hooks for baselines --------------------------------------------------
     def set_topology(self, edge_assign: np.ndarray) -> None:
@@ -355,6 +398,7 @@ class HFLEnv:
         self.time_hist.append(t_use)
         info = {"acc": self.acc, "energy": e_tot, "t_use": t_use,
                 "t_re": self.t_re}
+        self._observe_health(info)
         return self._state(), float(r), bool(self.t_re < 0), info
 
     @property
@@ -407,10 +451,10 @@ class AsyncHFLEnv(HFLEnv):
     """
 
     def __init__(self, cfg: EnvConfig, async_cfg=None, faults=None,
-                 telemetry=None):
+                 telemetry=None, health=None):
         from repro.runtime import AsyncConfig
         from repro.telemetry import Telemetry
-        super().__init__(cfg)
+        super().__init__(cfg, health=health)
         self.acfg = async_cfg or AsyncConfig()
         self.buffer_k = self.acfg.buffer_k or cfg.n_edges
         self.faults = faults
@@ -767,6 +811,7 @@ class AsyncHFLEnv(HFLEnv):
                     "flushed": False, "version": self.version,
                     "staleness": self._staleness.copy(),
                     "fleet_down": True, "dropped": False}
+            self._observe_health(info, flushed=False)
             if self.telemetry.enabled:
                 info["telemetry"] = self.telemetry.metrics.brief()
             return self._state(), 0.0, True, info
@@ -782,6 +827,7 @@ class AsyncHFLEnv(HFLEnv):
                 "staleness": self._staleness.copy(),
                 "dropped": self._last_upload_lost,
                 "retries": int(ev.payload.get("attempt", 0))}
+        self._observe_health(info, flushed=self._flushed)
         if self.telemetry.enabled:
             info["telemetry"] = self.telemetry.metrics.brief()
         return self._state(), float(r), bool(done), info

@@ -12,7 +12,13 @@ observable. This package is that layer:
   depth, drops, per-edge upload latency) with per-episode snapshots;
 * :mod:`ktime` — opt-in wall-clock timing of the Pallas
   ``segment_agg`` / ``segment_broadcast`` launches into the same
-  registry shape.
+  registry shape;
+* :mod:`ledger` — the persistent run ledger (:class:`RunLedger`):
+  append-only JSONL experiment streams recorded by
+  ``core.sync.run_scheme`` (DESIGN.md §8);
+* :mod:`health` — per-run health monitors (:class:`HealthMonitor`):
+  NaN/Inf guard, divergence and flush-stall detection, surfaced in
+  ``info["health"]`` with an opt-in abort policy.
 
 **The no-perturbation invariant** (tier-1, tests/test_telemetry.py):
 telemetry enabled vs disabled reproduces trajectories **bitwise**, on
@@ -31,7 +37,11 @@ hands the buffer/injector their hooks, and plumbs
 from __future__ import annotations
 
 from repro.telemetry import ktime  # noqa: F401
+from repro.telemetry import ledger  # noqa: F401
+from repro.telemetry.health import (  # noqa: F401
+    HealthAbort, HealthConfig, HealthEvent, HealthMonitor)
 from repro.telemetry.ktime import kernel_timing  # noqa: F401
+from repro.telemetry.ledger import RunLedger  # noqa: F401
 from repro.telemetry.metrics import MetricsRegistry  # noqa: F401
 from repro.telemetry.recorder import TraceRecorder  # noqa: F401
 

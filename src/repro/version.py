@@ -1,0 +1,4 @@
+"""Package version, recorded in every run-ledger header so archived
+experiment streams stay attributable to the code that produced them
+(``repro.telemetry.ledger``). Bump on ledger-schema-affecting changes."""
+__version__ = "0.10.0"

@@ -1,0 +1,497 @@
+"""Run ledger + health monitors (``repro.telemetry.ledger`` /
+``.health``, DESIGN.md §8):
+
+* health-monitor units: NaN/Inf guard (accuracy + bank), divergence
+  detection with recovery re-arm, flush-stall detection, the opt-in
+  abort policy, JSON state round-trip;
+* ledger units: content-digest run ids (deterministic, config-
+  sensitive), canonical byte-identical episode rows, resume appending
+  to the original stream;
+* **the bitwise no-perturbation guarantee extended**: ledger+health
+  enabled vs disabled reproduces trajectories bitwise — analytic and
+  real mode, faults included (the PR-8 telemetry contract, one layer
+  up);
+* a uniform ``_history`` schema across every ``SchemeSpec`` in
+  ``core.sync.SCHEMES`` (the episode rows depend on this contract);
+* the learning gate: two consecutive fixed-seed sweeps emit
+  byte-identical episode rows, the committed ``BENCH_learning.json``
+  baseline passes, and an injected accuracy regression
+  (``LEARNING_GATE_AR_SCALE``) demonstrably fails;
+* the stdlib-only ``scripts/ledger.py`` CLI (list / diff / report) and
+  the ``benchmarks/run.py --only`` merge fix;
+* health state + ledger run id ride ``checkpoint.store`` snapshots.
+"""
+import importlib.util
+import json
+import math
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.checkpoint import store
+from repro.core import sync
+from repro.core.agent import PPOAgent, PPOConfig
+from repro.runtime import AsyncConfig, ChurnEvent, FaultSpec, Outage
+from repro.sim.env import AsyncHFLEnv, EnvConfig, HFLEnv
+from repro.telemetry import (HealthAbort, HealthConfig, HealthEvent,
+                             HealthMonitor, RunLedger, ledger)
+
+import _subproc
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+ANALYTIC_CFG = dict(task="mnist", mode="analytic", n_devices=20,
+                    n_edges=4, threshold_time=400.0, seed=0)
+REAL_CFG = dict(task="mnist", mode="real", n_devices=8, n_edges=2,
+                n_local=32, batch_size=16, threshold_time=150.0,
+                gamma_max=2, seed=0)
+FAULTY = FaultSpec(drop_prob=0.2, transient_prob=0.25,
+                   outages=(Outage(1, 50.0, 40.0),),
+                   churn=(ChurnEvent(80.0, 2, "leave"),
+                          ChurnEvent(160.0, 2, "join")),
+                   seed=5)
+ACFG = AsyncConfig(buffer_k=2, flush_deadline=45.0)
+ACTION = np.array([2.0, 2.0])
+
+
+@pytest.fixture(autouse=True)
+def _no_process_default():
+    """No test leaks a process-default ledger into the next."""
+    yield
+    ledger.disable()
+
+
+def _episode(cfg_dict, spec, *, on, max_steps=10_000):
+    """One async episode with ledger+health+telemetry all on or all
+    off; returns (trajectory, final fingerprint, env)."""
+    env = AsyncHFLEnv(EnvConfig(**cfg_dict, telemetry=on, health=on),
+                      ACFG, faults=spec)
+    env.reset()
+    traj, done = [], False
+    for _ in range(max_steps):
+        _, r, done, info = env.step(ACTION)
+        traj.append((float(r), float(info["acc"]), info["edge"],
+                     info["flushed"]))
+        if done:
+            break
+    fp = (np.asarray(env._global_vec) if cfg_dict["mode"] == "real"
+          else np.asarray(env.acc_hist, np.float64))
+    return traj, fp, env
+
+
+# ---------------------------------------------------------------------------
+# health-monitor units
+# ---------------------------------------------------------------------------
+
+def test_health_nan_acc_guard_fires_once():
+    hm = HealthMonitor()
+    assert hm.observe(step=0, sim_time=0.0, acc=0.2) == []
+    new = hm.observe(step=1, sim_time=1.0, acc=float("nan"))
+    assert [e.kind for e in new] == ["nan_acc"]
+    assert new[0].severity == "critical" and hm.critical
+    # one-shot: a second non-finite accuracy does not re-fire
+    assert hm.observe(step=2, sim_time=2.0, acc=float("inf")) == []
+    assert len(hm.events) == 1
+
+
+def test_health_nan_bank_guard():
+    hm = HealthMonitor()
+    new = hm.observe(step=3, sim_time=9.0, acc=0.5, bank_finite=False)
+    assert [e.kind for e in new] == ["nan_bank"]
+    assert hm.critical and hm.events[0].step == 3
+
+
+def test_health_divergence_detection_and_rearm():
+    hm = HealthMonitor(HealthConfig(window=4, collapse_drop=0.1))
+    for i, acc in enumerate([0.5, 0.52, 0.54, 0.56]):
+        assert hm.observe(step=i, sim_time=float(i), acc=acc) == []
+    # collapse below trailing max (0.56) by > 0.1
+    new = hm.observe(step=4, sim_time=4.0, acc=0.40)
+    assert [e.kind for e in new] == ["divergence"]
+    assert new[0].severity == "warn" and not hm.critical
+    assert new[0].detail["trailing_max"] == pytest.approx(0.56)
+    # still collapsed: no spam
+    assert hm.observe(step=5, sim_time=5.0, acc=0.41) == []
+    # recovery above peak - drop/2 re-arms, then a fresh collapse fires
+    hm.observe(step=6, sim_time=6.0, acc=0.55)
+    hm.observe(step=7, sim_time=7.0, acc=0.56)
+    new = hm.observe(step=8, sim_time=8.0, acc=0.30)
+    assert [e.kind for e in new] == ["divergence"]
+    assert len(hm.events) == 2
+
+
+def test_health_flush_stall_and_rearm():
+    hm = HealthMonitor(HealthConfig(stall_events=3))
+    for i in range(2):
+        assert hm.observe(step=i, sim_time=0.0, acc=0.2,
+                          flushed=False) == []
+    new = hm.observe(step=2, sim_time=2.0, acc=0.2, flushed=False)
+    assert [e.kind for e in new] == ["flush_stall"]
+    assert new[0].detail["events_since_flush"] == 3
+    # stalled: no spam until a flush re-arms the detector
+    assert hm.observe(step=3, sim_time=3.0, acc=0.2, flushed=False) == []
+    hm.observe(step=4, sim_time=4.0, acc=0.2, flushed=True)
+    for i in range(5, 7):
+        hm.observe(step=i, sim_time=float(i), acc=0.2, flushed=False)
+    new = hm.observe(step=7, sim_time=7.0, acc=0.2, flushed=False)
+    assert [e.kind for e in new] == ["flush_stall"]
+
+
+def test_health_abort_policy_opt_in():
+    hm = HealthMonitor(HealthConfig(abort=True))
+    with pytest.raises(HealthAbort) as exc:
+        hm.observe(step=5, sim_time=1.0, acc=float("nan"))
+    assert exc.value.events[0].kind == "nan_acc"
+    # warn-severity events never abort
+    hm2 = HealthMonitor(HealthConfig(window=2, collapse_drop=0.05,
+                                     abort=True))
+    hm2.observe(step=0, sim_time=0.0, acc=0.5)
+    hm2.observe(step=1, sim_time=1.0, acc=0.5)
+    new = hm2.observe(step=2, sim_time=2.0, acc=0.1)
+    assert [e.kind for e in new] == ["divergence"]
+
+
+def test_health_state_roundtrip():
+    hm = HealthMonitor(HealthConfig(window=3))
+    hm.observe(step=0, sim_time=0.0, acc=0.3, bank_finite=False)
+    hm.observe(step=1, sim_time=1.0, acc=0.31, flushed=False)
+    st = json.loads(json.dumps(hm.state()))    # must survive JSON
+    hm2 = HealthMonitor()
+    hm2.set_state(st)
+    assert hm2.cfg == hm.cfg
+    assert [e.to_dict() for e in hm2.events] \
+        == [e.to_dict() for e in hm.events]
+    assert hm2.state() == hm.state()
+
+
+def test_env_surfaces_health_in_info():
+    env = HFLEnv(EnvConfig(**ANALYTIC_CFG, health=True))
+    env.reset()
+    _, _, _, info = env.run_fixed(2, 2)
+    assert info["health"] == []        # healthy run: present but empty
+    aenv = AsyncHFLEnv(EnvConfig(**ANALYTIC_CFG, health=True), ACFG)
+    aenv.reset()
+    _, _, _, info = aenv.step(ACTION)
+    assert isinstance(info["health"], list)
+
+
+# ---------------------------------------------------------------------------
+# ledger units
+# ---------------------------------------------------------------------------
+
+def test_config_digest_deterministic_and_exclusion():
+    cfg = EnvConfig(**ANALYTIC_CFG)
+    d1, s1 = ledger.config_digest(cfg, exclude=("agg", "mesh"))
+    d2, _ = ledger.config_digest(EnvConfig(**ANALYTIC_CFG),
+                                 exclude=("agg", "mesh"))
+    assert d1 == d2 and "agg" not in s1 and "mesh" not in s1
+    d3, _ = ledger.config_digest(
+        EnvConfig(**{**ANALYTIC_CFG, "seed": 7}),
+        exclude=("agg", "mesh"))
+    assert d3 != d1
+    assert ledger.config_digest(None) == ("none", None)
+
+
+def test_run_id_deterministic_and_config_sensitive(tmp_path):
+    lg = RunLedger(str(tmp_path))
+    env = HFLEnv(EnvConfig(**ANALYTIC_CFG))
+    rid = lg.begin_run(scheme="vanilla-hfl", env=env,
+                       params={"g1": 5, "g2": 4})
+    env2 = HFLEnv(EnvConfig(**ANALYTIC_CFG))
+    assert lg.begin_run(scheme="vanilla-hfl", env=env2,
+                        params={"g1": 5, "g2": 4}) == rid
+    env3 = HFLEnv(EnvConfig(**{**ANALYTIC_CFG, "seed": 3}))
+    assert lg.begin_run(scheme="vanilla-hfl", env=env3,
+                        params={"g1": 5, "g2": 4}) != rid
+    env4 = HFLEnv(EnvConfig(**ANALYTIC_CFG))
+    assert lg.begin_run(scheme="var-freq-a", env=env4) != rid
+    # one stream, one header row (begin_run twice did not duplicate)
+    rows = [json.loads(x) for x in open(lg.path(rid))]
+    assert [r["kind"] for r in rows] == ["header"]
+    assert rows[0]["schema"] == ledger.SCHEMA_VERSION
+    assert rows[0]["mesh"] == "single-chip"
+    assert rows[0]["env_cfg"]["seed"] == 0
+
+
+def test_repeat_runs_append_byte_identical_rows(tmp_path):
+    lg = RunLedger(str(tmp_path))
+    hs = []
+    for _ in range(2):
+        env = HFLEnv(EnvConfig(**ANALYTIC_CFG))
+        hs.append(sync.run_scheme("vanilla-hfl", env, ledger=lg))
+    assert hs[0]["ledger_run_id"] == hs[1]["ledger_run_id"]
+    lines = open(lg.path(hs[0]["ledger_run_id"])).read().splitlines()
+    assert len(lines) == 3             # header + two episode rows
+    assert lines[1] == lines[2]        # byte-identical fixed-seed rows
+
+
+def test_run_scheme_ledger_arg_forms(tmp_path):
+    env = HFLEnv(EnvConfig(**ANALYTIC_CFG))
+    h = sync.run_scheme("vanilla-hfl", env)       # no default installed
+    assert "ledger_run_id" not in h
+    ledger.enable(str(tmp_path))                  # process default
+    env2 = HFLEnv(EnvConfig(**ANALYTIC_CFG))
+    h2 = sync.run_scheme("vanilla-hfl", env2)
+    assert os.path.exists(
+        os.path.join(str(tmp_path), h2["ledger_run_id"] + ".jsonl"))
+    env3 = HFLEnv(EnvConfig(**ANALYTIC_CFG))
+    h3 = sync.run_scheme("vanilla-hfl", env3, ledger=False)
+    assert "ledger_run_id" not in h3              # explicit opt-out
+
+
+def test_episode_row_carries_telemetry_and_health(tmp_path):
+    lg = RunLedger(str(tmp_path))
+    env = AsyncHFLEnv(EnvConfig(**ANALYTIC_CFG, telemetry=True,
+                                health=True), ACFG, faults=FAULTY)
+    h = sync.run_scheme("async-fedavg", env, ledger=lg)
+    run = ledger.load_run(lg.path(h["ledger_run_id"]))
+    assert run["header"]["fault_digest"] != "none"
+    ep = run["episodes"][0]
+    assert ep["rounds"] == h["rounds"]
+    assert ep["flushes"] > 0 and ep["drops"] >= 0
+    assert ep["staleness"]["count"] >= 0
+    assert ep["healthy"] in (True, False)
+    assert len(ep["acc"]) == ep["rounds"] == len(ep["time"])
+
+
+# ---------------------------------------------------------------------------
+# the bitwise no-perturbation guarantee, one layer up
+# ---------------------------------------------------------------------------
+
+def test_ledger_health_bitwise_analytic_with_faults(tmp_path):
+    t_off, fp_off, _ = _episode(ANALYTIC_CFG, FAULTY, on=False)
+    ledger.enable(str(tmp_path))    # recording on + health + telemetry
+    t_on, fp_on, env = _episode(ANALYTIC_CFG, FAULTY, on=True)
+    sync.run_scheme("vanilla-hfl", HFLEnv(EnvConfig(**ANALYTIC_CFG)))
+    assert t_on == t_off
+    np.testing.assert_array_equal(fp_on, fp_off)
+    assert env.health is not None and env.telemetry.enabled
+
+
+def test_ledger_health_bitwise_real_mode():
+    t_off, fp_off, _ = _episode(REAL_CFG, None, on=False)
+    t_on, fp_on, _ = _episode(REAL_CFG, None, on=True)
+    assert t_on == t_off
+    np.testing.assert_array_equal(fp_on, fp_off)
+
+
+# ---------------------------------------------------------------------------
+# uniform _history schema across every SchemeSpec
+# ---------------------------------------------------------------------------
+
+HISTORY_KEYS = {"acc", "energy", "time", "final_acc", "total_energy",
+                "avg_energy", "rounds"}
+SMOKE_CFG = dict(task="mnist", mode="analytic", n_devices=10, n_edges=2,
+                 threshold_time=200.0, gamma_max=3, seed=0)
+SHARE_CFG = dict(task="mnist", mode="real", n_devices=6, n_edges=2,
+                 n_local=24, batch_size=8, threshold_time=40.0,
+                 gamma_max=2, seed=0)
+
+
+def _smoke_env_agent(name):
+    spec = sync.SCHEMES[name]
+    cfg_d = SHARE_CFG if name == "share" else SMOKE_CFG
+    if spec.needs_async:
+        env = AsyncHFLEnv(EnvConfig(**cfg_d), AsyncConfig(buffer_k=2))
+    else:
+        env = HFLEnv(EnvConfig(**cfg_d))
+    agent = None
+    if spec.needs_agent:
+        agent = PPOAgent(jax.random.PRNGKey(0), env.state_shape,
+                         env.action_dim, PPOConfig())
+    return env, agent
+
+
+@pytest.mark.parametrize("name", sorted(sync.SCHEMES))
+def test_history_schema_uniform_across_schemes(name):
+    """Every scheme's 2-episode smoke returns the same history keys
+    with consistent curve lengths (the ledger's episode-row contract).
+    ``share`` runs real mode (its topology shaping reads the label
+    histograms); everything else runs analytic."""
+    env, agent = _smoke_env_agent(name)
+    for _ in range(2):                           # 2-episode smoke
+        h = sync.run_scheme(name, env, agent=agent)
+        assert set(h) == HISTORY_KEYS, name
+        assert len(h["acc"]) == len(h["energy"]) == len(h["time"]) \
+            == h["rounds"] > 0
+        assert h["final_acc"] == h["acc"][-1]
+        assert h["total_energy"] == pytest.approx(sum(h["energy"]))
+
+
+# ---------------------------------------------------------------------------
+# the learning gate
+# ---------------------------------------------------------------------------
+
+def _load_gate():
+    spec = importlib.util.spec_from_file_location(
+        "_learning_gate", os.path.join(REPO, "scripts",
+                                       "learning_gate.py"))
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def test_gate_sweep_rows_byte_identical(tmp_path):
+    gate = _load_gate()
+    lg_root = str(tmp_path / "ledger")
+    rows1 = gate.run_sweep(ledger=lg_root)
+    rows2 = gate.run_sweep(ledger=lg_root)
+    assert rows1 == rows2
+    # two consecutive fixed-seed sweeps appended byte-identical
+    # episode rows to each scheme's stream
+    runs = ledger.list_runs(lg_root)
+    assert {r["scheme"] for r in runs} == set(gate.SCHEMES)
+    for r in runs:
+        lines = open(os.path.join(
+            lg_root, r["run_id"] + ".jsonl")).read().splitlines()
+        eps = [ln for ln in lines
+               if json.loads(ln)["kind"] == "episode"]
+        assert len(eps) == 2 and eps[0] == eps[1]
+
+
+def test_gate_compare_policy():
+    gate = _load_gate()
+    base = [{"scheme": "s", "target_acc": 0.45, "final_acc": 0.70,
+             "time_to_target_s": 100.0, "energy_to_target_mAh": 50.0}]
+    ok = [{"scheme": "s", "target_acc": 0.45, "final_acc": 0.69,
+           "time_to_target_s": 102.0, "energy_to_target_mAh": 51.0}]
+    assert gate.compare(ok, base, tol=0.05) == []
+    bad_acc = [{**ok[0], "final_acc": 0.60}]
+    assert len(gate.compare(bad_acc, base, tol=0.05)) == 1
+    bad_time = [{**ok[0], "time_to_target_s": 150.0}]
+    assert "time_to_target_s" in gate.compare(bad_time, base, 0.05)[0]
+    # target newly unreachable is always a regression
+    lost = [{**ok[0], "time_to_target_s": None,
+             "energy_to_target_mAh": None}]
+    assert len(gate.compare(lost, base, tol=0.05)) == 2
+    # a baseline that never reached the target gates nothing there
+    base_none = [{**base[0], "time_to_target_s": None,
+                  "energy_to_target_mAh": None}]
+    assert gate.compare(lost, base_none, tol=0.05) == []
+
+
+def test_gate_passes_committed_baseline_and_fails_injected():
+    out = _subproc.run_script(os.path.join(REPO, "scripts",
+                                           "learning_gate.py"),
+                              "--no-ledger")
+    assert "learning gate passed" in out.stdout
+    bad = subprocess.run(
+        [sys.executable, os.path.join(REPO, "scripts",
+                                      "learning_gate.py"),
+         "--no-ledger"],
+        env=_subproc.child_env(LEARNING_GATE_AR_SCALE="0.4"),
+        capture_output=True, text=True, timeout=600)
+    assert bad.returncode == 1, bad.stdout + bad.stderr
+    assert "LEARNING GATE FAILED" in bad.stdout
+    # the failed gate must not have rewritten the baseline
+    with open(os.path.join(REPO, "BENCH_learning.json")) as f:
+        baseline = json.load(f)
+    assert {r["scheme"] for r in baseline} >= set(_load_gate().SCHEMES)
+
+
+# ---------------------------------------------------------------------------
+# the stdlib CLI + report
+# ---------------------------------------------------------------------------
+
+def _seed_ledger(root):
+    lg = RunLedger(root)
+    for scheme, seed in (("vanilla-hfl", 0), ("var-freq-a", 0)):
+        env = HFLEnv(EnvConfig(**{**SMOKE_CFG, "seed": seed}))
+        sync.run_scheme(scheme, env, ledger=lg)
+    return ledger.list_runs(root)
+
+
+def test_cli_list_diff_report(tmp_path):
+    root = str(tmp_path / "ledger")
+    runs = _seed_ledger(root)
+    assert len(runs) == 2
+    cli = os.path.join(REPO, "scripts", "ledger.py")
+    out = subprocess.run(
+        [sys.executable, cli, "--root", root, "list"],
+        capture_output=True, text=True, timeout=120)
+    assert out.returncode == 0, out.stderr
+    for r in runs:
+        assert r["run_id"] in out.stdout
+    out = subprocess.run(
+        [sys.executable, cli, "--root", root, "diff",
+         runs[0]["run_id"][:6], runs[1]["run_id"][:6]],
+        capture_output=True, text=True, timeout=120)
+    assert out.returncode == 0, out.stderr
+    assert "scheme:" in out.stdout and "final_acc:" in out.stdout
+    html = str(tmp_path / "report.html")
+    out = subprocess.run(
+        [sys.executable, cli, "--root", root, "report", "--out", html],
+        capture_output=True, text=True, timeout=120)
+    assert out.returncode == 0, out.stderr
+    body = open(html).read()
+    assert body.count("<svg") == 2 and "vanilla-hfl" in body
+
+
+def test_diff_runs_config_and_metric_delta(tmp_path):
+    root = str(tmp_path)
+    lg = RunLedger(root)
+    for seed in (0, 1):
+        env = HFLEnv(EnvConfig(**{**SMOKE_CFG, "seed": seed}))
+        sync.run_scheme("vanilla-hfl", env, ledger=lg)
+    a, b = [r["_run"] for r in ledger.list_runs(root)]
+    d = ledger.diff_runs(a, b)
+    assert set(d["config"]) >= {"seed", "env_cfg.seed"}
+    assert d["metrics"]["final_acc"]["delta"] == pytest.approx(
+        b["episodes"][-1]["final_acc"] - a["episodes"][-1]["final_acc"])
+
+
+# ---------------------------------------------------------------------------
+# benchmarks/run.py --only merges instead of clobbering
+# ---------------------------------------------------------------------------
+
+def test_bench_runner_only_merges_results(tmp_path):
+    reports = tmp_path / "reports"
+    reports.mkdir()
+    sentinel = {"fig_other": [{"scheme": "x", "metric": 1.0}]}
+    with open(reports / "bench_results.json", "w") as f:
+        json.dump(sentinel, f)
+    env = _subproc.child_env()
+    env["PYTHONPATH"] = REPO + os.pathsep + env["PYTHONPATH"]
+    out = subprocess.run(
+        [sys.executable, "-m", "benchmarks.run", "--only", "fig4_comm"],
+        cwd=str(tmp_path), env=env, capture_output=True, text=True,
+        timeout=600)
+    assert out.returncode == 0, out.stdout + out.stderr
+    merged = json.load(open(reports / "bench_results.json"))
+    assert merged["fig_other"] == sentinel["fig_other"]  # preserved
+    assert "fig4_comm" in merged and merged["fig4_comm"]
+
+
+# ---------------------------------------------------------------------------
+# checkpointing: health state + ledger identity survive resume
+# ---------------------------------------------------------------------------
+
+def test_checkpoint_carries_health_and_ledger_id(tmp_path):
+    lg = RunLedger(str(tmp_path / "ledger"))
+    env = AsyncHFLEnv(EnvConfig(**ANALYTIC_CFG, health=True), ACFG,
+                      faults=FAULTY)
+    rid = lg.begin_run(scheme="async-fedavg", env=env,
+                       params={"g1": 2, "g2": 2})
+    env.reset()
+    for _ in range(12):
+        env.step(ACTION)
+    # make the monitor's arming state non-trivial before snapshotting
+    assert len(env.health._window) > 0
+    path = str(tmp_path / "ck")
+    store.save_runtime(env, path)
+    env2 = AsyncHFLEnv(EnvConfig(**ANALYTIC_CFG, health=True), ACFG,
+                       faults=FAULTY)
+    store.load_runtime(env2, path)
+    assert env2.health.state() == env.health.state()
+    assert env2._ledger_run_id == rid
+    # the resumed run appends to the original stream, no new run id
+    assert lg.begin_run(scheme="async-fedavg", env=env2,
+                        params={"g1": 2, "g2": 2}) == rid
+    rows = [json.loads(x) for x in open(lg.path(rid))]
+    assert [r["kind"] for r in rows] == ["header"]
+    assert math.isfinite(env2.acc)
